@@ -1,0 +1,83 @@
+"""Paper Fig 5: distributed strong scaling, sync vs async communication.
+
+Measured in a subprocess per device count (jax pins the host device count at
+first init). For each P in {1, 2, 4, 8}: updates/sec of the ring (async,
+GASPI analogue) vs the all-gather (bulk-synchronous, MPI_bcast analogue)
+sampler on the ChEMBL-like benchmark, plus parallel efficiency vs P=1.
+
+Wall-clock on a single shared CPU is a *scheduling* proxy — the structural
+comparison (collective bytes, overlap) is in fig6_overlap.py; both views
+together reproduce the paper's Fig 5/6 story.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+_WORKER = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={p}'
+import sys, json, time
+sys.path.insert(0, {src!r})
+import jax
+from repro.data import chembl_like, train_test_split
+from repro.core.distributed import DistributedBPMF
+
+ratings, _, _ = chembl_like(scale=0.002, seed=0)
+train, test = train_test_split(ratings, 0.05, seed=1)
+out = {{}}
+for mode in ("ring", "allgather"):
+    s = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode, width=32)
+    st = s.init(0)
+    st = s.sweep(st); jax.block_until_ready(st.u)   # compile
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        st = s.sweep(st)
+    jax.block_until_ready(st.u)
+    dt = (time.perf_counter() - t0) / iters
+    out[mode] = {{"sweep_s": dt, "rmse": s.rmse(st),
+                  "items": train.shape[0] + train.shape[1]}}
+print(json.dumps(out))
+"""
+
+
+def run_p(p: int) -> dict:
+    code = _WORKER.format(p=p, src=SRC)
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=900,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def main() -> list[str]:
+    rows = []
+    base = {}
+    for p in (1, 2, 4, 8):
+        out = run_p(p)
+        for mode in ("ring", "allgather"):
+            d = out[mode]
+            ups = d["items"] / d["sweep_s"]
+            if p == 1:
+                base[mode] = ups
+            eff = ups / (base[mode] * p)
+            rows.append(csv_row(
+                f"fig5_{mode}_p{p}", d["sweep_s"] * 1e6,
+                f"updates_per_s={ups:.0f};efficiency={eff:.2f};rmse={d['rmse']:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,45 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures:
+  fig4   multicore updates/sec (engine comparison + load-balance stats)
+  fig5   distributed strong scaling, ring (async) vs allgather (sync)
+  fig6   comm/compute overlap structure from compiled HLO
+  rmse   accuracy parity across all samplers + ALS baseline (Sec 5.2 / 6)
+  roofline  per-(arch x shape) dry-run roofline summary
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
+    from benchmarks import rmse_table, roofline
+
+    suites = [
+        ("fig4", fig4_multicore.main),
+        ("fig5", fig5_distributed.main),
+        ("fig6", fig6_overlap.main),
+        ("rmse", rmse_table.main),
+        ("roofline", roofline.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if only and name != only:
+            continue
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Distributed BPMF: ring (async) vs all-gather (sync) on 8 simulated devices.
+
+    PYTHONPATH=src python examples/distributed_bpmf.py
+
+Reproduces the paper's Sec 4/5 comparison at laptop scale: both samplers
+produce identical samples (shared per-item noise), the ring pipelines its
+communication behind the syrk batches (Fig 6's "both" region), the sync
+version all-gathers up front.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core.distributed import DistributedBPMF  # noqa: E402
+from repro.data import chembl_like, train_test_split  # noqa: E402
+
+
+def main():
+    ratings, _, _ = chembl_like(scale=0.005, seed=0)
+    train, test = train_test_split(ratings, 0.1, seed=1)
+    print(f"devices: {len(jax.devices())}; "
+          f"dataset {train.shape[0]} x {train.shape[1]}, {train.nnz} ratings")
+
+    results = {}
+    for mode in ("ring", "allgather"):
+        s = DistributedBPMF(train, test, k=32, alpha=2.0, mode=mode)
+        st = s.init(0)
+        st = s.sweep(st)
+        jax.block_until_ready(st.u)  # compile + warm
+        t0 = time.time()
+        for _ in range(10):
+            st = s.sweep(st)
+        jax.block_until_ready(st.u)
+        dt = (time.time() - t0) / 10
+        results[mode] = (dt, s.rmse(st))
+        n_items = train.shape[0] + train.shape[1]
+        print(f"{mode:10s} sweep {dt*1e3:7.1f} ms  "
+              f"({n_items/dt:,.0f} updates/s)  rmse {results[mode][1]:.4f}")
+    assert abs(results["ring"][1] - results["allgather"][1]) < 1e-3, \
+        "ring and sync must sample identically (paper Sec 5.2 parity)"
+    print("accuracy parity OK — ring == allgather samples")
+
+
+if __name__ == "__main__":
+    main()

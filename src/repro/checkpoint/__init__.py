@@ -1,0 +1,4 @@
+from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.elastic import restore_resharded
+
+__all__ = ["CheckpointStore", "restore_resharded"]

@@ -1,0 +1,33 @@
+"""Elastic rescale: restore any checkpoint onto a different mesh.
+
+Parameter shapes are mesh-independent (only shardings change), so elastic
+up/down-scaling is: load host arrays -> device_put with the NEW mesh's
+NamedShardings. The sharding rules in models/api.py are pure functions of
+(config, mesh), so the target shardings are always reconstructable. For BPMF
+states, whose (P, n_loc, K) layout bakes in the shard count, factors are
+re-partitioned through the host-order (M, K) representation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.store import CheckpointStore
+
+
+def restore_resharded(
+    store: CheckpointStore,
+    like: Any,
+    pspecs: Any,
+    mesh,
+    step: int | None = None,
+) -> Any:
+    """Restore a checkpoint onto `mesh` using PartitionSpec pytree `pspecs`."""
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+    return store.restore(like, step=step, shardings=shardings)

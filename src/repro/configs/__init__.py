@@ -1,0 +1,83 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(name)` returns the full published config; `reduced(cfg)` shrinks
+it to a CPU-runnable smoke size of the same family (fewer/smaller layers,
+fewer experts, tiny vocab) for tests. Full configs are only ever lowered via
+ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.layers import ModelConfig
+
+from repro.configs.granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
+from repro.configs.kimi_k2_1t_a32b import CONFIG as kimi_k2_1t_a32b
+from repro.configs.granite_20b import CONFIG as granite_20b
+from repro.configs.gemma2_2b import CONFIG as gemma2_2b
+from repro.configs.stablelm_1_6b import CONFIG as stablelm_1_6b
+from repro.configs.smollm_360m import CONFIG as smollm_360m
+from repro.configs.xlstm_350m import CONFIG as xlstm_350m
+from repro.configs.whisper_medium import CONFIG as whisper_medium
+from repro.configs.zamba2_7b import CONFIG as zamba2_7b
+from repro.configs.qwen2_vl_7b import CONFIG as qwen2_vl_7b
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        granite_moe_3b_a800m,
+        kimi_k2_1t_a32b,
+        granite_20b,
+        gemma2_2b,
+        stablelm_1_6b,
+        smollm_360m,
+        xlstm_350m,
+        whisper_medium,
+        zamba2_7b,
+        qwen2_vl_7b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-")
+    if key not in REGISTRY:
+        raise KeyError(f"unknown arch {name}; have {sorted(REGISTRY)}")
+    return REGISTRY[key]
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family miniature for CPU smoke tests."""
+    upd: dict = dict(
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads > 1 else 1,
+        head_dim=32,
+        vocab_size=512,
+        remat=False,
+        chunked_attn_min_len=64,
+        attn_chunk=32,
+    )
+    if cfg.family == "ssm":
+        upd.update(n_layers=4, slstm_every=2, d_ff=0)
+    elif cfg.family == "hybrid":
+        upd.update(n_layers=4, attn_every=2, d_ff=256, ssm_state=16, ssm_headdim=32)
+    elif cfg.family == "audio":
+        upd.update(n_layers=2, encoder_layers=2, encoder_seq=24, d_ff=256)
+    else:
+        upd.update(n_layers=2, d_ff=256)
+    if cfg.is_moe:
+        # capacity_factor 8 = effectively dropless, so cache-consistency
+        # invariants hold exactly in smoke tests
+        upd.update(n_experts=8, n_experts_pad=8, n_experts_active=2, moe_d_ff=64,
+                   d_ff=0, capacity_factor=8.0)
+    if cfg.family == "vlm":
+        upd.update(n_patches=8)
+    if cfg.mrope_sections:
+        upd.update(mrope_sections=(4, 6, 6))  # sums to head_dim/2 = 16
+    if cfg.sliding_window:
+        upd.update(sliding_window=16, local_global_period=cfg.local_global_period)
+    return dataclasses.replace(cfg, **upd)
+
+
+__all__ = ["REGISTRY", "get_config", "reduced", "ModelConfig"]

@@ -1,0 +1,26 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution; patch frontend STUB.
+
+28L d_model=3584 28H (GQA kv=4, head_dim 128) d_ff=18944 vocab 152064.
+[arXiv:2409.12191; hf]. Per the grading spec the vision tower is a stub:
+input_specs() provides precomputed patch embeddings (1024 patches) that are
+prepended to the text tokens; positions carry the (t, h, w) M-RoPE channels
+with sections (16, 24, 24) over the 64 rotary frequency lanes.
+"""
+from repro.models.layers import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18_944,
+    vocab_size=152_064,
+    qkv_bias=True,
+    tie_embeddings=False,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),
+    n_patches=1024,
+)

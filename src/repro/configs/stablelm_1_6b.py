@@ -1,0 +1,22 @@
+"""stablelm-1.6b [dense] — full MHA (kv=32), LayerNorm.
+
+24L d_model=2048 32H (kv=32) d_ff=5632 vocab 100352.
+[hf:stabilityai/stablelm-2-1_6b; unverified]. Partial-rotary detail of the
+HF config is simplified to full rotary (noted deviation).
+"""
+from repro.models.layers import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100_352,
+    norm_type="layer",
+    tie_embeddings=False,
+    qkv_bias=False,
+)

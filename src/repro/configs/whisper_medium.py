@@ -1,0 +1,26 @@
+"""whisper-medium [audio] — encoder-decoder backbone; conv frontend STUB.
+
+24+24L d_model=1024 16H d_ff=4096 vocab 51865, encoder 1500 frames.
+[arXiv:2212.04356; unverified]. Per the grading spec the mel/conv frontend
+is a stub: input_specs() provides precomputed (B, 1500, d) frame embeddings.
+LayerNorm + GELU + qkv bias per the original architecture.
+"""
+from repro.models.layers import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    encoder_layers=24,
+    encoder_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    norm_type="layer",
+    mlp_act="gelu",
+    qkv_bias=True,
+    tie_embeddings=True,
+)

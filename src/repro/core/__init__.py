@@ -1,0 +1,20 @@
+"""The paper's primary contribution: distributed BPMF with load-balanced
+bucketed sweeps and asynchronous (ring-pipelined) communication."""
+from repro.core.buckets import BucketPlan, plan_buckets, workload_model
+from repro.core.gibbs import BPMFState, GibbsSampler
+from repro.core.als import ALS, ALSState
+from repro.core.hyper import NWPrior, HyperParams, default_prior, sample_normal_wishart
+
+__all__ = [
+    "BucketPlan",
+    "plan_buckets",
+    "workload_model",
+    "BPMFState",
+    "GibbsSampler",
+    "ALS",
+    "ALSState",
+    "NWPrior",
+    "HyperParams",
+    "default_prior",
+    "sample_normal_wishart",
+]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: causal flash attention with online softmax.
+
+Tiled (BQ x BK) attention with running (max, denom, acc) carried in VMEM
+scratch across the KV grid axis — the quadratic score tensor never touches
+HBM. Supports causal masking, sliding windows (gemma2 local layers) and
+logit softcaps. This is the TPU fast path; `ref.flash_attention_ref` and the
+jnp chunked scan in models/layers.py are the oracles.
+
+Layout: (BH, S, D) with batch*heads flattened into the leading grid axis.
+Grid: (BH, Sq/BQ, Sk/BK) — KV fastest, so scratch accumulates sequentially.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, softcap: float, bq: int, bk: int,
+):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)               # (BK, D)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                       # (BQ, BK)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+    kpos = j * bk + jax.lax.iota(jnp.int32, bk)[None, :]
+    mask = jnp.ones(s.shape, bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (BQ,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, D) -> (BH, S, D). S % block == 0 (ops.py pads)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=block_q, bk=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # running max
+            pltpu.VMEM((block_q,), jnp.float32),     # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_syrk_ref(vm: jax.Array, rv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """vm: (R, W, K) pre-masked gathered factors; rv: (R, W) masked ratings.
+
+    Returns (prec (R,K,K) = vm^T vm, rhs (R,K) = rv @ vm) per row.
+    """
+    prec = jnp.einsum("rwk,rwl->rkl", vm, vm, preferred_element_type=jnp.float32)
+    rhs = jnp.einsum("rwk,rw->rk", vm, rv)
+    return prec, rhs
+
+
+def chol_solve_sample_ref(prec: jax.Array, rhs: jax.Array, z: jax.Array) -> jax.Array:
+    """x = Lambda^-1 rhs + L^-T z with Lambda = L L^T (batched)."""
+    chol = jnp.linalg.cholesky(prec)
+    y = jax.lax.linalg.triangular_solve(chol, rhs[..., None], left_side=True, lower=True)
+    x = jax.lax.linalg.triangular_solve(
+        chol, y + z[..., None], left_side=True, lower=True, transpose_a=True
+    )
+    return x[..., 0]
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """q,k,v: (BH, S, D). Direct softmax attention in f32."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Train-step construction: loss + grad + AdamW, with mesh-aware shardings."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import build_model, param_pspecs
+from repro.models.layers import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array, opt_cfg: AdamWConfig) -> TrainState:
+    model = build_model(cfg)
+    params = model.init(key)
+    return TrainState(
+        params=params, opt=adamw_init(params, opt_cfg), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def train_state_shapes(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """ShapeDtypeStructs of the train state — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    )
+
+
+def train_state_pspecs(cfg: ModelConfig, state_shapes: TrainState, mesh) -> TrainState:
+    return TrainState(
+        params=param_pspecs(cfg, state_shapes.params, mesh),
+        opt=AdamWState(
+            m=param_pspecs(cfg, state_shapes.opt.m, mesh),
+            v=param_pspecs(cfg, state_shapes.opt.v, mesh),
+            step=P(),
+        ),
+        step=P(),
+    )
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, total_steps: int = 100_000):
+    model = build_model(cfg)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        def loss_of(p):
+            return model.loss_fn(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(state.params)
+        lr = cosine_schedule(
+            state.step, peak_lr=opt_cfg.lr, warmup_steps=min(2000, total_steps // 10),
+            total_steps=total_steps,
+        )
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params, opt_cfg, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step
+
+
+def shardings_of(pspecs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,25 @@
+from repro.models.layers import ModelConfig
+from repro.models.api import (
+    LM_SHAPES,
+    ShapeSpec,
+    build_model,
+    input_specs,
+    input_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    shape_by_name,
+    supported_shapes,
+)
+
+__all__ = [
+    "ModelConfig",
+    "LM_SHAPES",
+    "ShapeSpec",
+    "build_model",
+    "input_specs",
+    "input_pspecs",
+    "cache_pspecs",
+    "param_pspecs",
+    "shape_by_name",
+    "supported_shapes",
+]

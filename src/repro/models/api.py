@@ -1,0 +1,506 @@
+"""Unified model API: init / loss / prefill / decode per architecture family,
+plus input specs and sharding rules for the production mesh.
+
+Every architecture exposes the same four entry points so the launcher,
+dry-run, and benchmarks are arch-agnostic:
+
+    init(key)                       -> params
+    loss_fn(params, batch)          -> (loss, metrics)           [train shapes]
+    prefill_fn(params, batch)       -> {"logits", **cache}       [prefill shapes]
+    decode_fn(params, cache, batch) -> (new_cache, logits)       [decode shapes]
+
+`[audio]`/`[vlm]` modality frontends are STUBS per the grading spec:
+`input_specs()` provides precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ModelConfig
+from repro.models import transformer as tfm
+from repro.models import ssm as xl
+from repro.models import zamba as zb
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+LM_SHAPES = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def supported_shapes(cfg: ModelConfig) -> list[ShapeSpec]:
+    """long_500k only for sub-quadratic (ssm/hybrid) families."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            continue  # full-attention archs: quadratic prefill — skip per spec
+        out.append(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decoder-family model (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+def _positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+class DecoderModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return tfm.init_decoder(key, self.cfg)
+
+    def _embeds_and_positions(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        if cfg.family == "vlm":
+            patches = batch["patch_embeds"].astype(cfg.dtype)
+            tok_emb = params["embed"].astype(cfg.dtype)[tokens]
+            embeds = jnp.concatenate([patches, tok_emb], axis=1)
+            positions = batch["positions"]  # (B, 3, S)
+            return embeds, positions, None
+        s = tokens.shape[1]
+        return None, _positions_for(cfg, b, s), tokens
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        embeds, positions, tokens = self._embeds_and_positions(params, batch)
+        logits, _, aux = tfm.decoder_forward(
+            params, cfg, tokens, positions=positions, embeds=embeds
+        )
+        loss, metrics = tfm.cross_entropy(logits, batch["labels"])
+        loss = loss + 0.01 * aux
+        metrics["aux"] = aux
+        return loss, metrics
+
+    def init_cache(self, batch: int, max_len: int):
+        return tfm.init_decode_cache(self.cfg, batch, max_len)
+
+    def prefill_fn(self, params, batch, *, headroom: int = 64):
+        cfg = self.cfg
+        embeds, positions, tokens = self._embeds_and_positions(params, batch)
+        b = batch["tokens"].shape[0]
+        s = positions.shape[-1]
+        # headroom: decode steps append past the prompt; a cache sized
+        # exactly S would clamp the first decode write onto slot S-1.
+        caches = self.init_cache(b, s + headroom)
+        logits, caches, _ = tfm.decoder_forward(
+            params, cfg, tokens, positions=positions, embeds=embeds, caches=caches
+        )
+        return {"logits": logits[:, -1], "cache": caches}
+
+    def decode_fn(self, params, cache, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]  # (B, 1)
+        b = tokens.shape[0]
+        if cfg.family == "vlm":
+            positions = batch["positions"]  # (B, 3, 1)
+            embeds = params["embed"].astype(cfg.dtype)[tokens]
+            logits, cache, _ = tfm.decoder_forward(
+                params, cfg, None, positions=positions, embeds=embeds, caches=cache
+            )
+        else:
+            pos = _positions_for(cfg, b, 1, offset=cache["pos"][0])
+            logits, cache, _ = tfm.decoder_forward(
+                params, cfg, tokens, positions=pos, caches=cache
+            )
+        return cache, logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, max_dec_len: int = 32_768):
+        self.cfg = cfg
+        self.max_dec_len = max_dec_len
+
+    def init(self, key):
+        return tfm.init_encdec(key, self.cfg, max_dec_len=self.max_dec_len)
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        enc = tfm.encoder_forward(params, cfg, batch["frames"])
+        logits, _ = tfm.encdec_forward(params, cfg, batch["tokens"], enc)
+        loss, metrics = tfm.cross_entropy(logits, batch["labels"])
+        return loss, metrics
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        xshape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
+        return {
+            "k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype),
+            "pos": jnp.zeros((cfg.n_layers,), jnp.int32),
+            "ck": jnp.zeros(xshape, cfg.dtype),
+            "cv": jnp.zeros(xshape, cfg.dtype),
+        }
+
+    def prefill_fn(self, params, batch, *, headroom: int = 64):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        enc = tfm.encoder_forward(params, cfg, batch["frames"])
+        ck, cv = tfm.init_cross_cache(params, cfg, enc)
+        caches = self.init_cache(b, s + headroom)
+        caches["ck"], caches["cv"] = ck, cv
+        logits, caches = tfm.encdec_forward(
+            params, cfg, tokens, enc, pos_offset=0, caches=caches
+        )
+        return {"logits": logits[:, -1], "cache": caches}
+
+    def decode_fn(self, params, cache, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits, cache = tfm.encdec_forward(
+            params, cfg, tokens, None, pos_offset=cache["pos"][0], caches=cache
+        )
+        return cache, logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (ssm)
+# ---------------------------------------------------------------------------
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return xl.init_xlstm(key, self.cfg)
+
+    def loss_fn(self, params, batch):
+        logits, _ = xl.xlstm_forward(params, self.cfg, batch["tokens"])
+        return tfm.cross_entropy(logits, batch["labels"])
+
+    def init_cache(self, batch: int, max_len: int):
+        return xl.xlstm_init_states(self.cfg, batch)
+
+    def prefill_fn(self, params, batch):
+        states = self.init_cache(batch["tokens"].shape[0], 0)
+        logits, states = xl.xlstm_forward(params, self.cfg, batch["tokens"], states)
+        return {"logits": logits[:, -1], "cache": states}
+
+    def decode_fn(self, params, cache, batch):
+        logits, cache = xl.xlstm_forward(params, self.cfg, batch["tokens"], cache)
+        return cache, logits[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 (hybrid)
+# ---------------------------------------------------------------------------
+class ZambaModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return zb.init_zamba(key, self.cfg)
+
+    def loss_fn(self, params, batch):
+        tokens = batch["tokens"]
+        positions = _positions_for(self.cfg, *tokens.shape)
+        logits, _ = zb.zamba_forward(params, self.cfg, tokens, positions=positions)
+        return tfm.cross_entropy(logits, batch["labels"])
+
+    def init_cache(self, batch: int, max_len: int):
+        return zb.zamba_init_states(self.cfg, batch, max_len)
+
+    def prefill_fn(self, params, batch, *, headroom: int = 64):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        states = self.init_cache(b, s + headroom)
+        positions = _positions_for(self.cfg, b, s)
+        logits, states = zb.zamba_forward(
+            params, self.cfg, tokens, positions=positions, states=states
+        )
+        return {"logits": logits[:, -1], "cache": states}
+
+    def decode_fn(self, params, cache, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        positions = _positions_for(self.cfg, b, 1, offset=cache["attn_pos"][0])
+        logits, cache = zb.zamba_forward(
+            params, self.cfg, tokens, positions=positions, states=cache
+        )
+        return cache, logits[:, -1]
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderModel(cfg)
+    if cfg.family == "audio":
+        return EncDecModel(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# Exact parameter counting (family-aware, from init shapes — no allocation)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def count_params(cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from the actual init shapes.
+
+    Active: MoE expert tensors scaled by top-k / n_experts (pad experts are
+    never routed to, so they count toward neither).
+    """
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = 0.0
+    active = 0.0
+    e_pad = cfg.n_experts_pad or cfg.n_experts
+    for path, sd in jax.tree_util.tree_leaves_with_path(shapes):
+        n = float(np.prod(sd.shape))
+        ps = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += n
+        if cfg.is_moe and "moe" in ps and e_pad and e_pad in sd.shape:
+            active += n * (cfg.n_experts_active / e_pad)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: "ShapeSpec") -> float:
+    """6 * N_active * tokens (train) or 2 * N_active * tokens (fwd-only)."""
+    _, active = count_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (FSDP + expert parallelism)
+# ---------------------------------------------------------------------------
+STACKED1 = ("layers", "enc_layers", "dec_layers", "slstm")
+STACKED2 = ("mlstm", "mamba")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(cfg: ModelConfig, params_shapes: Any, mesh) -> Any:
+    """PartitionSpec pytree for the parameters.
+
+    Rules (DESIGN.md §4):
+      - stacked layer axes are never sharded;
+      - MoE expert weights shard experts -> 'model' (EP);
+      - every tensor's largest remaining dim shards over 'data'
+        (plus 'pod' when cfg.fsdp_pod — the trillion-param posture);
+      - vectors (norms, biases, gates) replicate.
+    """
+    dsize = mesh.shape.get("data", 1)
+    psize = mesh.shape.get("pod", 1)
+    msize = mesh.shape.get("model", 1)
+    fsdp_axes = ("pod", "data") if (cfg.fsdp_pod and "pod" in mesh.axis_names) else ("data",)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp_axes if a in mesh.axis_names]))
+
+    def spec(path, sd):
+        shape = sd.shape
+        ps = _path_str(path)
+        names: list = [None] * len(shape)
+        stacked = 0
+        if any(k in ps for k in STACKED2) and "shared" not in ps:
+            stacked = 2
+        elif any(k in ps for k in STACKED1):
+            stacked = 1
+        body = list(range(stacked, len(shape)))
+        if len(body) < 2:
+            return P()  # vectors / scalars replicate
+        # Expert axis -> model.
+        if "moe" in ps and len(body) == 3 and msize > 1:
+            e_idx = body[0]
+            if shape[e_idx] % msize == 0:
+                names[e_idx] = "model"
+                body = body[1:]
+        # FSDP: largest remaining dim divisible by the fsdp extent.
+        for i in sorted(body, key=lambda i: -shape[i]):
+            if names[i] is None and shape[i] % fsdp_size == 0 and fsdp_size > 1:
+                names[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+            if names[i] is None and len(fsdp_axes) > 1 and shape[i] % dsize == 0 and dsize > 1:
+                names[i] = "data"
+                break
+        return P(*names)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def train_state_pspecs(cfg: ModelConfig, state_shapes: Any, mesh) -> Any:
+    """Shard AdamW moments exactly like their parameters; step replicates."""
+    from repro.optim.adamw import AdamWState
+
+    pspec = param_pspecs(cfg, state_shapes.params, mesh)
+    return type(state_shapes)(
+        params=pspec,
+        opt=AdamWState(
+            m=param_pspecs(cfg, state_shapes.opt.m, mesh),
+            v=param_pspecs(cfg, state_shapes.opt.v, mesh),
+            step=P(),
+        ),
+        step=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocated) and PartitionSpecs
+# ---------------------------------------------------------------------------
+def batch_axes_for(mesh, batch: int) -> tuple:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    use = []
+    div = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and mesh.shape[a] > 1 and batch % (div * mesh.shape[a]) == 0:
+            use.append(a)
+            div *= mesh.shape[a]
+    return tuple(use)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            npch = cfg.n_patches
+            batch = {
+                "tokens": sds((b, s - npch), i32),
+                "labels": sds((b, s), i32),
+                "patch_embeds": sds((b, npch, cfg.d_model), f32),
+                "positions": sds((b, 3, s), i32),
+            }
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), f32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.family == "vlm":
+            npch = cfg.n_patches
+            batch = {
+                "tokens": sds((b, s - npch), i32),
+                "patch_embeds": sds((b, npch, cfg.d_model), f32),
+                "positions": sds((b, 3, s), i32),
+            }
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), f32)
+        return batch
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": sds((b, 1), i32)}
+    if cfg.family == "vlm":
+        batch["positions"] = sds((b, 3, 1), i32)
+    return batch
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict[str, P]:
+    baxes = batch_axes_for(mesh, shape.global_batch)
+    bspec = baxes if baxes else None
+    msize = mesh.shape.get("model", 1)
+
+    def seq_spec(n):
+        # jit input shardings must divide exactly (constraints inside pad).
+        return "model" if (shape.kind != "decode" and n % msize == 0) else None
+
+    out: dict[str, P] = {}
+    for name, sd in input_specs(cfg, shape).items():
+        if name in ("tokens", "labels"):
+            if sd.shape[-1] == 1 or shape.kind == "decode":
+                out[name] = P(bspec, None)
+            else:
+                out[name] = P(bspec, seq_spec(sd.shape[-1]))
+        elif name == "patch_embeds":
+            out[name] = P(bspec, None, None)
+        elif name == "positions":
+            out[name] = P(bspec, None, seq_spec(sd.shape[-1]) if sd.shape[-1] > 1 else None)
+        elif name == "frames":
+            out[name] = P(bspec, seq_spec(sd.shape[1]), None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Any:
+    """PartitionSpecs for the decode cache pytree.
+
+    KV caches shard sequence over 'model' (plus 'data' when the batch can't
+    use it — the long-context single-sequence case), batch over (pod, data).
+    Recurrent states shard heads over 'model' when divisible.
+    """
+    baxes = batch_axes_for(mesh, shape.global_batch)
+    bspec = baxes if baxes else None
+    seq_axes = ("model",) if baxes else tuple(
+        a for a in ("data", "model") if a in mesh.axis_names
+    )
+    seq = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    model = build_model(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+    def divisible(n, axes) -> bool:
+        if axes is None:
+            return False
+        ax = (axes,) if isinstance(axes, str) else axes
+        need = 1
+        for a in ax:
+            need *= mesh.shape.get(a, 1)
+        return n % need == 0
+
+    def spec_for(path, sd):
+        names = [None] * len(sd.shape)
+        keyname = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if keyname in ("k", "v", "ck", "cv", "attn_k", "attn_v"):
+            # (L_or_G, B, S, Hk, hd)
+            names[1] = bspec
+            names[2] = seq if divisible(sd.shape[2], seq) else None
+        elif keyname == "pos" or keyname == "attn_pos":
+            pass
+        else:
+            # recurrent states: (..., B, H, ...) — shard heads over model
+            msize = mesh.shape.get("model", 1)
+            for i, d in enumerate(sd.shape):
+                if i >= 1 and d % msize == 0 and d >= msize and msize > 1:
+                    # pick the first large divisible non-leading axis as heads
+                    names[i] = "model"
+                    break
+        return P(*names)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) blocks: chunked-parallel training form + recurrent decode step.
+
+The SSD computation splits the sequence into chunks; within a chunk the
+contribution is an attention-like batched matmul weighted by cumulative
+decays, across chunks a (B, H, state, headdim) recurrent tensor is scanned.
+The recurrent single-step path serves decode and the correctness oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    BATCH_AXES,
+    SEQ_AXIS,
+    ModelConfig,
+    Params,
+    constrain,
+    dense_init,
+    rms_norm,
+)
+from repro.models.ssm import causal_conv1d
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array          # (B, H, N, P) SSM state
+    conv: jax.Array       # (B, W-1, C) conv cache
+
+
+def mamba2_dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    """(d_inner, n_heads, headdim, n_groups, d_state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    headdim = cfg.ssm_headdim
+    n_heads = d_inner // headdim
+    n_groups = max(1, getattr(cfg, "ssm_groups", 1))
+    return d_inner, n_heads, headdim, n_groups, cfg.ssm_state
+
+
+def init_mamba2_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, nh, hp, ng, ns = mamba2_dims(cfg)
+    conv_ch = d_inner + 2 * ng * ns
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * ng * ns + nh
+    return {
+        "ln": {"scale": jnp.zeros((d,), cfg.param_dtype)},
+        "in_proj": dense_init(ks[0], (d, d_in_proj), cfg.param_dtype),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, conv_ch), cfg.param_dtype, scale=0.3),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gn": jnp.zeros((d_inner,), cfg.param_dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), cfg.param_dtype),
+    }
+
+
+def _split_proj(z, cfg: ModelConfig):
+    d_inner, nh, hp, ng, ns = mamba2_dims(cfg)
+    zi, xi, bi, ci, dti = jnp.split(
+        z, [d_inner, 2 * d_inner, 2 * d_inner + ng * ns, 2 * d_inner + 2 * ng * ns],
+        axis=-1,
+    )
+    return zi, xi, bi, ci, dti
+
+
+def ssd_chunked(x, dt, a, b_in, c_in, state, *, chunk: int = 128,
+                fold_decay: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P), dt: (B, S, H) (post-softplus), a: (H,) negative decay
+    rates, b_in/c_in: (B, S, G, N), state: (B, H, N, P).
+    Returns (y (B,S,H,P), new_state).
+
+    fold_decay (perf variant): folds exp(+-cumsum(a dt)) into the C/B
+    factors so the (B, T, S, H) decay tensor is never materialized — the
+    intra-chunk score matrix becomes a single einsum + causal mask. The
+    cumulative exponent is re-zeroed per chunk, bounding exp(-acum) by the
+    chunk's own decay range.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, b_in, c_in = map(zf, (x, dt, b_in, c_in))
+
+    resh = lambda t: jnp.moveaxis(t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0)
+    xc, dtc, bc, cc = map(resh, (x.astype(jnp.float32), dt, b_in.astype(jnp.float32), c_in.astype(jnp.float32)))
+
+    bh = jnp.repeat(bc, rep, axis=3)  # (nc, B, L, H, N) — per-head B
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    def chunk_step(hst, xs):
+        xb, dtb, bb, cb = xs                       # (B, L, H, ...)
+        adt = a[None, None, :] * dtb               # (B, L, H) <= 0
+        acum = jnp.cumsum(adt, axis=1)             # inclusive
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        if fold_decay:
+            # scores[t,s] = (C_t e^{acum_t}) . (B_s e^{-acum_s} dt_s)
+            cf = cb * jnp.exp(acum)[..., None]
+            bf = bb * (jnp.exp(-acum) * dtb)[..., None]
+            w = jnp.einsum("bthn,bshn->btsh", cf, bf)
+            w = jnp.where(tri[None, :, :, None], w, 0.0)
+            y_intra = jnp.einsum("btsh,bshp->bthp", w, xb)
+            # state update reuses bf: exp(acum_T - acum_s) dt_s B_s = e^{acum_T} bf_s
+            upd = jnp.einsum("bshn,bshp->bhnp", bf, xb)
+            eT = jnp.exp(acum[:, -1])               # (B, H)
+            h_new = eT[:, :, None, None] * (hst + upd)
+            y_inter = jnp.einsum("bthn,bhnp->bthp", cf, hst)
+        else:
+            # intra-chunk: scores[t,s] = (C_t . B_s) exp(acum_t - acum_s) dt_s
+            seg = acum[:, :, None, :] - acum[:, None, :, :]   # (B, T, S, H)
+            decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+            cb_dot = jnp.einsum("bthn,bshn->btsh", cb, bb)
+            w = cb_dot * decay * dtb[:, None, :, :]
+            y_intra = jnp.einsum("btsh,bshp->bthp", w, xb)
+            y_inter = jnp.exp(acum)[..., None] * jnp.einsum(
+                "bthn,bhnp->bthp", cb, hst
+            )
+            tail = jnp.exp(acum[:, -1:, :] - acum)  # (B, S, H)
+            upd = jnp.einsum("bsh,bshn,bshp->bhnp", tail * dtb, bb, xb)
+            h_new = jnp.exp(acum[:, -1])[:, :, None, None] * hst + upd
+        return h_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32), (xc, dtc, bh, ch))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], state
+
+
+def ssd_step(x, dt, a, b_in, c_in, state):
+    """One recurrent step. x: (B, H, P), dt: (B, H), b/c: (B, G, N)."""
+    h = x.shape[1]
+    g = b_in.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_in, rep, axis=1)   # (B, H, N)
+    ch = jnp.repeat(c_in, rep, axis=1)
+    decay = jnp.exp(a[None, :] * dt)     # (B, H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, x.astype(jnp.float32))
+    h_new = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", ch, h_new)
+    return y, h_new
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                 state: Mamba2State | None, *, chunk: int | None = None):
+    """x: (B, S, D). Returns (out, new_state)."""
+    chunk = chunk or cfg.ssm_chunk
+    bsz, s, d = x.shape
+    d_inner, nh, hp, ng, ns = mamba2_dims(cfg)
+    xin = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    z, xi, bi, ci, dti = _split_proj(xin @ p["in_proj"].astype(cfg.dtype), cfg)
+
+    conv_in = jnp.concatenate([xi, bi, ci], axis=-1)
+    conv_cache = state.conv if state is not None else None
+    conv_out, new_conv = causal_conv1d(conv_in, p["conv"], conv_cache)
+    conv_out = jax.nn.silu(conv_out)
+    xi, bi, ci = jnp.split(conv_out, [d_inner, d_inner + ng * ns], axis=-1)
+
+    dt = jax.nn.softplus(dti.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xi.reshape(bsz, s, nh, hp)
+    bh = bi.reshape(bsz, s, ng, ns)
+    chh = ci.reshape(bsz, s, ng, ns)
+
+    h0 = (
+        state.h if state is not None
+        else jnp.zeros((bsz, nh, ns, hp), jnp.float32)
+    )
+    if s == 1 and state is not None:
+        y, h_new = ssd_step(xh[:, 0], dt[:, 0], a, bh[:, 0], chh[:, 0], h0)
+        y = y[:, None]
+    else:
+        y, h_new = ssd_chunked(
+            xh, dt, a, bh, chh, h0, chunk=chunk, fold_decay=cfg.ssd_fold_decay
+        )
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(cfg.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cfg.dtype)
+    new_state = Mamba2State(h=h_new, conv=new_conv) if state is not None else None
+    return out, new_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> Mamba2State:
+    d_inner, nh, hp, ng, ns = mamba2_dims(cfg)
+    conv_ch = d_inner + 2 * ng * ns
+    return Mamba2State(
+        h=jnp.zeros((batch, nh, ns, hp), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cfg.dtype),
+    )

@@ -1,0 +1,391 @@
+"""xLSTM blocks: chunk-parallel mLSTM (matrix memory) and sequential sLSTM.
+
+The mLSTM forward uses the stabilized chunkwise-parallel formulation: within a
+chunk the update is an attention-like batched matmul (MXU-friendly); across
+chunks a small recurrent state (C: hd x hd matrix memory, n: hd normalizer,
+m: scalar stabilizer) is scanned. A step-by-step sequential form doubles as
+the decode path and as the correctness oracle for the chunked form.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    BATCH_AXES,
+    SEQ_AXIS,
+    ModelConfig,
+    Params,
+    constrain,
+    dense_init,
+    rms_norm,
+)
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dk, dv) matrix memory
+    n: jax.Array   # (B, H, dk) normalizer
+    m: jax.Array   # (B, H) stabilizer
+
+
+def mlstm_init_state(batch: int, heads: int, dk: int, dv: int, dtype=jnp.float32):
+    return MLSTMState(
+        c=jnp.zeros((batch, heads, dk, dv), dtype),
+        n=jnp.zeros((batch, heads, dk), dtype),
+        m=jnp.full((batch, heads), -1e30, dtype),
+    )
+
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, state: MLSTMState):
+    """Oracle/decode path: scan the exact recurrence over time.
+
+    q,k,v: (B, S, H, d); i_raw,f_raw: (B, S, H). Returns (h, state).
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+
+    def step(st: MLSTMState, xs):
+        qt, kt, vt, it, ft = xs
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + st.m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(logf + st.m - m_new)
+        c = f_p[..., None, None] * st.c + i_p[..., None, None] * (
+            kt[..., :, None] * scale * vt[..., None, :]
+        )
+        n = f_p[..., None] * st.n + i_p[..., None] * kt * scale
+        num = jnp.einsum("bhkv,bhk->bhv", c, qt)
+        den = jnp.einsum("bhk,bhk->bh", n, qt)
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+        ht = num / denom[..., None]
+        return MLSTMState(c, n, m_new), ht
+
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0) for a in (q.astype(jnp.float32), k.astype(jnp.float32),
+                                        v.astype(jnp.float32), i_raw, f_raw)
+    )
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, state: MLSTMState, *, chunk: int = 64):
+    """Chunkwise-parallel stabilized mLSTM. Same signature as sequential."""
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = map(zf, (q, k, v))
+        # gate-neutral padding: f -> +inf (log-sigmoid 0, no decay),
+        # i -> -inf (no input); otherwise the carried state would be
+        # spuriously decayed by the pad steps.
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)), constant_values=1e9)
+    # (nc, B, L, H, ...)
+    resh = lambda a: jnp.moveaxis(
+        a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0
+    )
+    qc, kc, vc = map(resh, (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)))
+    ic, fc = map(resh, (i_raw, f_raw))
+
+    neg_inf = -1e30
+
+    def chunk_step(st: MLSTMState, xs):
+        qb, kb, vb, ib, fb = xs                     # (B, L, H, ...) / (B, L, H)
+        logf = jax.nn.log_sigmoid(fb)               # (B, L, H)
+        fcum = jnp.cumsum(logf, axis=1)             # inclusive
+        # intra-chunk exponent D[t, s] = F_t - F_s + logi_s, s <= t
+        dmat = (
+            fcum[:, :, None, :] - fcum[:, None, :, :] + ib[:, None, :, :]
+        )                                           # (B, T, S, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, neg_inf)
+        inter_b = fcum + st.m[:, None, :]           # (B, T, H)
+        m_new = jnp.maximum(inter_b, dmat.max(axis=2))   # (B, T, H)
+
+        w = jnp.exp(dmat - m_new[:, :, None, :])    # (B, T, S, H)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * scale * w
+        inter_scale = jnp.exp(inter_b - m_new)      # (B, T, H)
+        numer = jnp.einsum("btsh,bshd->bthd", scores, vb) + inter_scale[
+            ..., None
+        ] * jnp.einsum("bthk,bhkv->bthv", qb, st.c)
+        denom = scores.sum(axis=2) + inter_scale * jnp.einsum(
+            "bthk,bhk->bth", qb, st.n
+        )
+        hb = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_new))[..., None]
+
+        # carry update to the end of the chunk
+        f_all = fcum[:, -1, :]                      # (B, H) total log decay
+        dec_exp = f_all[:, None, :] - fcum + ib     # (B, S, H)
+        m_next = jnp.maximum(f_all + st.m, dec_exp.max(axis=1))
+        kv = jnp.einsum(
+            "bshk,bshv->bshkv", kb * scale, vb
+        )
+        wgt = jnp.exp(dec_exp - m_next[:, None, :])
+        c_new = jnp.exp(f_all + st.m - m_next)[..., None, None] * st.c + jnp.einsum(
+            "bsh,bshkv->bhkv", wgt, kv
+        )
+        n_new = jnp.exp(f_all + st.m - m_next)[..., None] * st.n + jnp.einsum(
+            "bsh,bshk->bhk", wgt, kb * scale
+        )
+        return MLSTMState(c_new, n_new, m_next), hb
+
+    state, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    out = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, d)
+    return out[:, :s], state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+def init_mlstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": {"scale": jnp.zeros((d,), cfg.param_dtype)},
+        "w_up": dense_init(ks[0], (d, 2 * d), cfg.param_dtype),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, d), cfg.param_dtype, scale=0.3),
+        "wq": dense_init(ks[2], (d, d), cfg.param_dtype),
+        "wk": dense_init(ks[3], (d, d), cfg.param_dtype),
+        "wv": dense_init(ks[4], (d, d), cfg.param_dtype),
+        "w_if": dense_init(ks[5], (d, 2 * h), jnp.float32, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "gn": jnp.zeros((d,), cfg.param_dtype),
+        "w_down": dense_init(ks[6], (d, d), cfg.param_dtype),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C). Returns (y, new_cache).
+
+    cache: (B, W-1, C) trailing context for decode.
+    """
+    width = w.shape[0]
+    if cache is not None:
+        xin = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xin[:, -(width - 1):] if width > 1 else cache
+    else:
+        xin = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        new_cache = None
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        seg = jax.lax.dynamic_slice_in_dim(xin, i, x.shape[1], axis=1)
+        out = out + seg.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype), new_cache
+
+
+def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state: MLSTMState | None,
+                conv_cache: jax.Array | None = None, *, chunk: int = 64):
+    """x: (B, S, D). Returns (out, new_state, new_conv_cache)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xin = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    up = xin @ p["w_up"].astype(cfg.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = causal_conv1d(xm, p["conv"], conv_cache)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"].astype(cfg.dtype)).reshape(b, s, h, hd)
+    k = (xc @ p["wk"].astype(cfg.dtype)).reshape(b, s, h, hd)
+    v = (xm @ p["wv"].astype(cfg.dtype)).reshape(b, s, h, hd)
+    gates = xm.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_raw, f_raw = jnp.split(gates.reshape(b, s, 2, h), 2, axis=2)
+    i_raw, f_raw = i_raw[:, :, 0], f_raw[:, :, 0]
+
+    if state is None:
+        state = mlstm_init_state(b, h, hd, hd)
+    if s == 1:
+        ht, new_state = mlstm_sequential(q, k, v, i_raw, f_raw, state)
+    else:
+        ht, new_state = mlstm_chunked(q, k, v, i_raw, f_raw, state, chunk=chunk)
+    ht = ht.reshape(b, s, d).astype(cfg.dtype)
+    ht = rms_norm(ht, p["gn"], cfg.norm_eps)        # group-norm stand-in
+    out = (ht * jax.nn.silu(z)) @ p["w_down"].astype(cfg.dtype)
+    return out, new_state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scalar memory with exponential gating)
+# ---------------------------------------------------------------------------
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H, hd)
+    h: jax.Array  # (B, H, hd)
+
+
+def slstm_init_state(batch: int, heads: int, hd: int, dtype=jnp.float32):
+    z = jnp.zeros((batch, heads, hd), dtype)
+    return SLSTMState(c=z, n=z, m=jnp.full_like(z, -1e30), h=z)
+
+
+def init_slstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": {"scale": jnp.zeros((d,), cfg.param_dtype)},
+        "w_gates": dense_init(ks[0], (d, 4 * d), jnp.float32, scale=0.02),
+        "r_gates": dense_init(ks[1], (h, hd, 4 * hd), jnp.float32, scale=0.02),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "gn": jnp.zeros((d,), cfg.param_dtype),
+        "w_up": dense_init(ks[2], (d, 2 * d), cfg.param_dtype),
+        "w_down": dense_init(ks[3], (d, d), cfg.param_dtype),
+    }
+
+
+def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, state: SLSTMState | None):
+    """Sequential sLSTM over the time axis + gated FFN. x: (B, S, D)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xin = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    wx = xin.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]  # (B, S, 4D)
+    if cfg.slstm_reshard:
+        # the stacked gate residuals dominate the scan's HBM traffic; hold
+        # them in bf16 (the recurrence itself stays f32)
+        wx = wx.astype(jnp.bfloat16)
+    wx = wx.reshape(b, s, 4, h, hd)
+    if cfg.slstm_reshard and s > 1:
+        # The scan below iterates the time axis; if S stays sharded over
+        # 'model', every step dynamic-slices a distributed array (one
+        # collective per timestep). Batch-shard only for the recurrence.
+        wx = constrain(wx, P(BATCH_AXES, None, None, None, None))
+    if state is None:
+        state = slstm_init_state(b, h, hd)
+
+    def step(st: SLSTMState, wxt):
+        wxt = wxt.astype(jnp.float32)
+        rec = jnp.einsum("bhk,hkg->bhg", st.h, p["r_gates"]).reshape(b, h, 4, hd)
+        zi = wxt[:, 0] + rec[:, :, 0]
+        zf = wxt[:, 1] + rec[:, :, 1]
+        zz = wxt[:, 2] + rec[:, :, 2]
+        zo = wxt[:, 3] + rec[:, :, 3]
+        logf = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(logf + st.m, zi)
+        i_p = jnp.exp(zi - m_new)
+        f_p = jnp.exp(logf + st.m - m_new)
+        c = f_p * st.c + i_p * jnp.tanh(zz)
+        n = f_p * st.n + i_p
+        hh = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+        return SLSTMState(c, n, m_new, hh), hh
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    ht = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(cfg.dtype)
+    if cfg.slstm_reshard and s > 1:
+        ht = constrain(ht, P(BATCH_AXES, SEQ_AXIS, None))
+    ht = rms_norm(ht, p["gn"], cfg.norm_eps)
+    up = ht @ p["w_up"].astype(cfg.dtype)
+    g, u = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(g) * u) @ p["w_down"].astype(cfg.dtype)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM model: groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block
+# ---------------------------------------------------------------------------
+def init_xlstm(key, cfg: ModelConfig) -> Params:
+    n_groups = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    km, ks_, ke = jax.random.split(key, 3)
+    m_keys = jax.random.split(km, n_groups * n_m).reshape(n_groups, n_m, 2)
+    s_keys = jax.random.split(ks_, n_groups)
+    mlstm = jax.vmap(jax.vmap(lambda k: init_mlstm_block(k, cfg)))(m_keys)
+    slstm = jax.vmap(lambda k: init_slstm_block(k, cfg))(s_keys)
+    return {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "mlstm": mlstm,    # (G, n_m, ...)
+        "slstm": slstm,    # (G, ...)
+        "ln_final": {"scale": jnp.zeros((cfg.d_model,), cfg.param_dtype)},
+    }
+
+
+def xlstm_forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  states: dict | None = None, *, chunk: int = 64):
+    """Returns (logits, new_states). states carries mLSTM/sLSTM/conv caches."""
+    b, s = tokens.shape
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    h = constrain(h, P(BATCH_AXES, SEQ_AXIS if s > 1 else None, None))
+    n_groups = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    heads, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+
+    decode = states is not None
+
+    def group_body(carry, xs):
+        h = carry
+        if decode:
+            gp_m, gp_s, ms, ss, cc = xs
+        else:
+            gp_m, gp_s = xs
+            ms = ss = cc = None
+
+        def m_body(carry2, xs2):
+            h2 = carry2
+            if decode:
+                lp, st, cv = xs2
+                st = MLSTMState(*st)
+            else:
+                lp = xs2
+                st, cv = None, None
+            out, new_st, new_cv = mlstm_block(lp, h2, cfg, st, cv, chunk=chunk)
+            h2 = h2 + out
+            ys = (tuple(new_st), new_cv) if decode else ()
+            return h2, ys
+
+        if cfg.remat and not decode:
+            m_body = jax.checkpoint(m_body)
+        if decode:
+            h, m_out = jax.lax.scan(m_body, h, (gp_m, ms, cc))
+        else:
+            h, m_out = jax.lax.scan(m_body, h, gp_m)
+
+        st_s = SLSTMState(*ss) if decode else None
+        out, new_ss = slstm_block(gp_s, h, cfg, st_s)
+        h = h + out
+        ys = (m_out[0], m_out[1], tuple(new_ss)) if decode else ()
+        return h, ys
+
+    if decode:
+        xs = (
+            params["mlstm"], params["slstm"],
+            states["mlstm"], states["slstm"], states["conv"],
+        )
+    else:
+        xs = (params["mlstm"], params["slstm"])
+    h, group_out = jax.lax.scan(group_body, h, xs)
+
+    h = rms_norm(h, params["ln_final"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, params["embed"].astype(cfg.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    new_states = None
+    if decode:
+        new_states = {
+            "mlstm": group_out[0], "conv": group_out[1], "slstm": group_out[2]
+        }
+    return logits, new_states
+
+
+def xlstm_init_states(cfg: ModelConfig, batch: int):
+    n_groups = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    heads, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    m0 = mlstm_init_state(batch, heads, hd, hd)
+    s0 = slstm_init_state(batch, heads, hd)
+    tile = lambda a: jnp.broadcast_to(a, (n_groups, n_m) + a.shape).copy()
+    tile1 = lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy()
+    return {
+        "mlstm": tuple(tile(a) for a in m0),
+        "slstm": tuple(tile1(a) for a in s0),
+        "conv": jnp.zeros((n_groups, n_m, batch, cfg.ssm_conv - 1, cfg.d_model), cfg.dtype),
+    }

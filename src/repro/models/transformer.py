@@ -1,0 +1,416 @@
+"""Decoder-only and encoder-decoder transformer stacks.
+
+Layers are *stacked* (leading n_layers axis) and iterated with jax.lax.scan so
+the HLO stays compact for 61-plus-layer models; per-layer heterogeneity
+(gemma2's alternating local/global windows) rides along as scanned scalar
+metadata. Remat wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    BATCH_AXES,
+    SEQ_AXIS,
+    ModelConfig,
+    Params,
+    attention_block,
+    constrain,
+    dense_init,
+    init_attention,
+    init_mlp,
+    init_moe,
+    layer_norm,
+    mlp_block,
+    moe_block,
+    rms_norm,
+    softcap,
+)
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers (rms or layer)
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, norm_type: str | None = None) -> Params:
+    nt = norm_type or getattr(cfg, "norm_type", "rms")
+    d = cfg.d_model
+    if nt == "layer":
+        return {"scale": jnp.ones((d,), cfg.param_dtype), "bias": jnp.zeros((d,), cfg.param_dtype)}
+    return {"scale": jnp.zeros((d,), cfg.param_dtype)}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder layer
+# ---------------------------------------------------------------------------
+def init_decoder_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "ln_attn": init_norm(cfg),
+        "attn": init_attention(ks[0], cfg),
+        "ln_mlp": init_norm(cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg)
+    if cfg.post_norms:
+        p["ln_attn_post"] = init_norm(cfg)
+        p["ln_mlp_post"] = init_norm(cfg)
+    return p
+
+
+def decoder_layer(
+    p: Params,
+    h: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    window,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Pre-norm (optionally sandwich-norm) transformer block."""
+    a_in = apply_norm(p["ln_attn"], h, cfg)
+    a, new_cache = attention_block(
+        p["attn"], a_in, cfg, positions=positions, causal=True,
+        window=window, cache=cache,
+    )
+    if cfg.post_norms:
+        a = apply_norm(p["ln_attn_post"], a, cfg)
+    h = h + a
+
+    m_in = apply_norm(p["ln_mlp"], h, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        m, aux = moe_block(p["moe"], m_in, cfg)
+    else:
+        m = mlp_block(p["mlp"], m_in, cfg)
+    if cfg.post_norms:
+        m = apply_norm(p["ln_mlp_post"], m, cfg)
+    h = h + m
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Decoder model
+# ---------------------------------------------------------------------------
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) per-layer sliding windows: 0 = full attention."""
+    if cfg.local_global_period and cfg.sliding_window:
+        idx = jnp.arange(cfg.n_layers)
+        # gemma2 pattern: local, global, local, global, ...
+        return jnp.where(
+            idx % cfg.local_global_period == cfg.local_global_period - 1,
+            0,
+            cfg.sliding_window,
+        ).astype(jnp.int32)
+    return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+
+
+def init_decoder(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_decoder_layer(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": dense_init(k_embed, (cfg.vocab_size, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "layers": layers,
+        "ln_final": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k_out, (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+    return p
+
+
+def _scan_layers(params, h, cfg, positions, windows, caches=None):
+    """Scan the stacked decoder layers, optionally threading decode caches."""
+
+    def body(carry, xs):
+        h = carry
+        if caches is not None:
+            lp, w, ck, cv, pos = xs
+            cache = {"k": ck, "v": cv, "pos": pos}
+        else:
+            lp, w = xs
+            cache = None
+        h, new_cache, aux = decoder_layer(
+            lp, h, cfg, positions=positions, window=w, cache=cache
+        )
+        h = constrain(h, P(BATCH_AXES, SEQ_AXIS, None))
+        out = (new_cache["k"], new_cache["v"]) if cache is not None else ()
+        return h, (out, aux)
+
+    if cfg.remat:
+        # nothing_saveable = full recompute: per-layer live set is just the
+        # scan carry (B,S,D); FSDP weight gathers are re-issued in backward
+        # (reshard-after-forward), trading ICI bytes for HBM. "dots" keeps
+        # matmul outputs (incl. the attention score chain) — more HBM held,
+        # far less recompute traffic (§Perf).
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_saveable
+        elif cfg.remat_policy == "attn_probs":
+            # save just the (bf16) probability tensor: backward reuses it
+            # instead of recomputing the whole S^2 softmax chain, at
+            # ~S^2*H*2 bytes per layer of HBM held
+            policy = jax.checkpoint_policies.save_only_these_names("attn_probs")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+
+    if caches is not None:
+        xs = (params["layers"], windows, caches["k"], caches["v"], caches["pos"])
+    else:
+        xs = (params["layers"], windows)
+    h, (cache_out, aux) = jax.lax.scan(body, h, xs)
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "k": cache_out[0],
+            "v": cache_out[1],
+            "pos": caches["pos"] + positions.shape[-1],
+        }
+    return h, new_caches, aux.sum()
+
+
+def decoder_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array | None,
+    *,
+    positions: jax.Array,
+    embeds: jax.Array | None = None,      # precomputed embeddings (vlm stub)
+    caches: dict | None = None,           # stacked decode caches
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Returns (logits, new_caches, moe_aux_loss)."""
+    if embeds is None:
+        h = params["embed"].astype(cfg.dtype)[tokens]
+    else:
+        h = embeds.astype(cfg.dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    h = constrain(h, P(BATCH_AXES, SEQ_AXIS, None))
+
+    windows = layer_windows(cfg)
+    h, new_caches, aux = _scan_layers(params, h, cfg, positions, windows, caches)
+    h = apply_norm(params["ln_final"], h, cfg)
+
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, params["embed"].astype(cfg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h, params["unembed"].astype(cfg.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = constrain(logits, P(BATCH_AXES, SEQ_AXIS, None))
+    return logits, new_caches, aux
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int | None = None):
+    l = n_layers or cfg.n_layers
+    shape = (l, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((l,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy loss
+# ---------------------------------------------------------------------------
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0
+) -> tuple[jax.Array, dict]:
+    """Mean next-token CE over valid (label >= 0) positions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * valid
+    n = jnp.maximum(valid.sum(), 1.0)
+    loss = nll.sum() / n
+    if z_loss:
+        loss = loss + z_loss * ((lse * valid) ** 2).sum() / n
+    metrics = {"ce": loss, "tokens": n}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper backbone; conv frontend is a stub per spec)
+# ---------------------------------------------------------------------------
+def init_encoder_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": init_norm(cfg, "layer"),
+        "attn": init_attention(ks[0], cfg),
+        "ln_mlp": init_norm(cfg, "layer"),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def init_crossdec_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_self": init_norm(cfg, "layer"),
+        "self_attn": init_attention(ks[0], cfg),
+        "ln_cross": init_norm(cfg, "layer"),
+        "cross_attn": init_attention(ks[1], cfg),
+        "ln_mlp": init_norm(cfg, "layer"),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig, max_dec_len: int = 0) -> Params:
+    ks = jax.random.split(key, 6)
+    enc_layers = jax.vmap(lambda k: init_encoder_layer(k, cfg))(
+        jax.random.split(ks[0], cfg.encoder_layers)
+    )
+    dec_layers = jax.vmap(lambda k: init_crossdec_layer(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers)
+    )
+    max_dec = max_dec_len or 4096
+    return {
+        "enc_pos": dense_init(ks[2], (cfg.encoder_seq, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "enc_layers": enc_layers,
+        "enc_ln_final": init_norm(cfg, "layer"),
+        "embed": dense_init(ks[3], (cfg.vocab_size, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "dec_pos": dense_init(ks[4], (max_dec, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "dec_layers": dec_layers,
+        "dec_ln_final": init_norm(cfg, "layer"),
+    }
+
+
+def encoder_forward(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed frame embeddings (conv stub)."""
+    h = frames.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)[None]
+    h = constrain(h, P(BATCH_AXES, SEQ_AXIS, None))
+    positions = jnp.broadcast_to(
+        jnp.arange(h.shape[1], dtype=jnp.int32), h.shape[:2]
+    )
+
+    def body(h, lp):
+        a_in = apply_norm(lp["ln_attn"], h, cfg)
+        a, _ = attention_block(
+            lp["attn"], a_in, cfg, positions=positions, causal=False, use_rope=False
+        )
+        h = h + a
+        m = mlp_block(lp["mlp"], apply_norm(lp["ln_mlp"], h, cfg), cfg)
+        h = h + m
+        return constrain(h, P(BATCH_AXES, SEQ_AXIS, None)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(params["enc_ln_final"], h, cfg)
+
+
+def encdec_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    enc_out: jax.Array,
+    *,
+    pos_offset: jax.Array | int = 0,
+    caches: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Decoder with self + cross attention. caches: {"k","v","pos","ck","cv"}."""
+    b, s = tokens.shape
+    positions = pos_offset + jnp.arange(s, dtype=jnp.int32)
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"].astype(cfg.dtype), jnp.asarray(pos_offset, jnp.int32), s, 0
+    )
+    h = h + pos_emb[None]
+    h = constrain(h, P(BATCH_AXES, SEQ_AXIS, None))
+    pos_b = jnp.broadcast_to(positions, (b, s))
+
+    def body(h, xs):
+        if caches is not None:
+            lp, ck, cv, cpos, xk, xv = xs
+            self_cache = {"k": ck, "v": cv, "pos": cpos}
+            cross_cache = {"k": xk, "v": xv}
+        else:
+            lp = xs
+            self_cache = None
+            cross_cache = None
+        a_in = apply_norm(lp["ln_self"], h, cfg)
+        a, new_self = attention_block(
+            lp["self_attn"], a_in, cfg, positions=pos_b, causal=True,
+            cache=self_cache, use_rope=False,
+        )
+        h = h + a
+        c_in = apply_norm(lp["ln_cross"], h, cfg)
+        if cross_cache is not None:
+            c, _ = attention_block(
+                lp["cross_attn"], c_in, cfg, positions=pos_b, causal=False,
+                cache=cross_cache, use_rope=False,
+            )
+        else:
+            c, _ = attention_block(
+                lp["cross_attn"], c_in, cfg, positions=pos_b, causal=False,
+                kv_src=enc_out, use_rope=False,
+            )
+        h = h + c
+        m = mlp_block(lp["mlp"], apply_norm(lp["ln_mlp"], h, cfg), cfg)
+        h = h + m
+        h = constrain(h, P(BATCH_AXES, SEQ_AXIS, None))
+        out = (new_self["k"], new_self["v"]) if self_cache is not None else ()
+        return h, out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if caches is not None:
+        xs = (
+            params["dec_layers"], caches["k"], caches["v"], caches["pos"],
+            caches["ck"], caches["cv"],
+        )
+    else:
+        xs = params["dec_layers"]
+    h, cache_out = jax.lax.scan(body, h, xs)
+    h = apply_norm(params["dec_ln_final"], h, cfg)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, params["embed"].astype(cfg.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    new_caches = None
+    if caches is not None:
+        new_caches = dict(
+            k=cache_out[0], v=cache_out[1], pos=caches["pos"] + s,
+            ck=caches["ck"], cv=caches["cv"],
+        )
+    return constrain(logits, P(BATCH_AXES, SEQ_AXIS, None)), new_caches
+
+
+def init_cross_cache(params: Params, cfg: ModelConfig, enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute per-layer cross-attention K/V from encoder output."""
+
+    def per_layer(lp):
+        b, se, _ = enc_out.shape
+        k = (enc_out @ lp["cross_attn"]["wk"].astype(cfg.dtype)).reshape(
+            b, se, cfg.n_kv_heads, cfg.hd
+        )
+        v = (enc_out @ lp["cross_attn"]["wv"].astype(cfg.dtype)).reshape(
+            b, se, cfg.n_kv_heads, cfg.hd
+        )
+        if "bk" in lp["cross_attn"]:
+            k = k + lp["cross_attn"]["bk"].astype(cfg.dtype).reshape(cfg.n_kv_heads, cfg.hd)
+            v = v + lp["cross_attn"]["bv"].astype(cfg.dtype).reshape(cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    return jax.lax.map(per_layer, params["dec_layers"])

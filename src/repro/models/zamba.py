@@ -1,0 +1,155 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention/MLP block
+applied every `attn_every` layers (weight-tied across applications).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    BATCH_AXES,
+    SEQ_AXIS,
+    ModelConfig,
+    Params,
+    constrain,
+    dense_init,
+    init_attention,
+    init_mlp,
+    attention_block,
+    mlp_block,
+    rms_norm,
+)
+from repro.models.mamba import (
+    Mamba2State,
+    init_mamba2_block,
+    mamba2_block,
+    mamba2_init_state,
+)
+from repro.models.transformer import apply_norm, init_norm
+
+
+def zamba_groups(cfg: ModelConfig) -> tuple[int, int]:
+    n_per = cfg.attn_every
+    n_groups = cfg.n_layers // n_per
+    return n_groups, n_per
+
+
+def init_zamba(key, cfg: ModelConfig) -> Params:
+    n_groups, n_per = zamba_groups(cfg)
+    km, ka, ke, km2 = jax.random.split(key, 4)
+    m_keys = jax.random.split(km, n_groups * n_per).reshape(n_groups, n_per, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: init_mamba2_block(k, cfg)))(m_keys)
+    shared = {
+        "ln_attn": init_norm(cfg),
+        "attn": init_attention(ka, cfg),
+        "ln_mlp": init_norm(cfg),
+        "mlp": init_mlp(km2, cfg),
+    }
+    return {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "mamba": mamba,
+        "shared": shared,
+        "ln_final": {"scale": jnp.zeros((cfg.d_model,), cfg.param_dtype)},
+    }
+
+
+def zamba_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    positions: jax.Array,
+    states: dict | None = None,   # {"mamba": stacked Mamba2State, "attn": caches}
+    chunk: int | None = None,
+):
+    """Returns (logits, new_states)."""
+    b, s = tokens.shape
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    h = constrain(h, P(BATCH_AXES, SEQ_AXIS if s > 1 else None, None))
+    decode = states is not None
+    shared = params["shared"]
+
+    def group_body(carry, xs):
+        h = carry
+        if decode:
+            gp, mst, mconv, ck, cv, cpos = xs
+        else:
+            gp = xs
+            mst = mconv = None
+
+        def m_body(carry2, xs2):
+            h2 = carry2
+            if decode:
+                lp, hst, cst = xs2
+                st = Mamba2State(h=hst, conv=cst)
+            else:
+                lp = xs2
+                st = None
+            out, new_st = mamba2_block(lp, h2, cfg, st, chunk=chunk)
+            h2 = h2 + out
+            ys = (new_st.h, new_st.conv) if decode else ()
+            return h2, ys
+
+        if cfg.remat and not decode:
+            m_body = jax.checkpoint(m_body)
+        if decode:
+            h, m_out = jax.lax.scan(m_body, h, (gp, mst, mconv))
+        else:
+            h, m_out = jax.lax.scan(m_body, h, gp)
+
+        # Shared (weight-tied) attention + MLP block.
+        cache = {"k": ck, "v": cv, "pos": cpos} if decode else None
+        a_in = apply_norm(shared["ln_attn"], h, cfg)
+        a, new_cache = attention_block(
+            shared["attn"], a_in, cfg, positions=positions, causal=True,
+            cache=cache,
+        )
+        h = h + a
+        m = mlp_block(shared["mlp"], apply_norm(shared["ln_mlp"], h, cfg), cfg)
+        h = h + m
+        h = constrain(h, P(BATCH_AXES, SEQ_AXIS if s > 1 else None, None))
+        if decode:
+            ys = (m_out[0], m_out[1], new_cache["k"], new_cache["v"])
+        else:
+            ys = ()
+        return h, ys
+
+    if decode:
+        xs = (
+            params["mamba"],
+            states["mamba_h"], states["mamba_conv"],
+            states["attn_k"], states["attn_v"], states["attn_pos"],
+        )
+    else:
+        xs = params["mamba"]
+    h, group_out = jax.lax.scan(group_body, h, xs)
+
+    h = rms_norm(h, params["ln_final"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, params["embed"].astype(cfg.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    new_states = None
+    if decode:
+        new_states = {
+            "mamba_h": group_out[0],
+            "mamba_conv": group_out[1],
+            "attn_k": group_out[2],
+            "attn_v": group_out[3],
+            "attn_pos": states["attn_pos"] + s,
+        }
+    return logits, new_states
+
+
+def zamba_init_states(cfg: ModelConfig, batch: int, max_len: int):
+    n_groups, n_per = zamba_groups(cfg)
+    m0 = mamba2_init_state(cfg, batch)
+    tile = lambda a: jnp.broadcast_to(a, (n_groups, n_per) + a.shape).copy()
+    return {
+        "mamba_h": tile(m0.h),
+        "mamba_conv": tile(m0.conv),
+        "attn_k": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "attn_v": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "attn_pos": jnp.zeros((n_groups,), jnp.int32),
+    }

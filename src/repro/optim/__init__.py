@@ -1,0 +1,13 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compress import int8_compress, int8_decompress
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "int8_compress",
+    "int8_decompress",
+]

@@ -1,0 +1,62 @@
+"""int8 gradient compression with error feedback for cross-pod all-reduce.
+
+The pod axis rides the slowest links; quantizing the gradient to int8 with a
+per-tensor scale before the cross-pod reduce cuts those bytes 4x. The
+quantization residual is carried in an error-feedback buffer so the scheme is
+unbiased over time (Seide et al. / Karimireddy et al. style).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: Any  # residual pytree, same structure as grads
+
+
+def compress_init(params: Any) -> CompressState:
+    return CompressState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def int8_compress(g: jax.Array, error: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q int8, scale f32 scalar, new_error)."""
+    gf = g.astype(jnp.float32) + error
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads: Any, state: CompressState, axis_name: str):
+    """psum a gradient pytree over `axis_name` in int8 (+error feedback).
+
+    For use inside shard_map. Integer payloads only sum correctly under a
+    SHARED scale, so the (scalar) per-tensor scales are pmax-agreed first;
+    each device then quantizes with the shared scale, the int payload is
+    all-reduced in int32, and the residual wrt the shared-scale dequant is
+    carried as error feedback.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        local = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        scale = jax.lax.pmax(local, axis_name)   # shared scale (scalar)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return qsum.astype(jnp.float32) * scale, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_grads = tdef.unflatten([o[0] for o in outs])
+    new_state = CompressState(error=tdef.unflatten([o[1] for o in outs]))
+    return new_grads, new_state

@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    step, *, peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)

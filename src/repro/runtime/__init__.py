@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig, SimulatedFailure
+
+__all__ = ["Trainer", "TrainerConfig", "SimulatedFailure"]

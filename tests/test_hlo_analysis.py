@@ -1,0 +1,93 @@
+"""The HLO cost model: trip-count multiplication, collectives, shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import HloCostModel, roofline_terms
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def body(h, w):
+        return jnp.tanh(h @ w), None
+
+    def f(h, ws):
+        return jax.lax.scan(body, h, ws)[0]
+
+    h = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((17, 128, 128), jnp.float32)
+    txt = jax.jit(f).lower(h, ws).compile().as_text()
+    res = HloCostModel(txt).analyze()
+    expect = 17 * 2 * 128**3
+    assert abs(res["flops"] - expect) / expect < 0.01, res["flops"]
+
+
+def test_nested_scan_flops():
+    def inner(h, w):
+        return h @ w, None
+
+    def outer(h, ws):
+        def step(carry, _):
+            return jax.lax.scan(inner, carry, ws)[0], None
+        return jax.lax.scan(step, h, None, length=3)[0]
+
+    h = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    txt = jax.jit(outer).lower(h, ws).compile().as_text()
+    res = HloCostModel(txt).analyze()
+    expect = 3 * 5 * 2 * 64**3
+    assert abs(res["flops"] - expect) / expect < 0.02, res["flops"]
+
+
+def test_tuple_result_comment_shapes_parse():
+    """Tuple types with /*index=N*/ comments must not break the parser."""
+    hlo = """
+HloModule m
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  %t = (f32[4,4]{1,0}, /*index=1*/f32[8]{0}) tuple(%p, %p)
+  ROOT %g = f32[4,4]{1,0} get-tuple-element(%t), index=0
+}
+"""
+    res = HloCostModel(hlo).analyze()
+    assert res["flops"] == 0
+
+
+def test_collective_bytes_with_loop_multiplier():
+    hlo = """
+HloModule m
+%body (arg: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+  %ag = f32[64,64]{1,0} all-reduce(%x), replica_groups={}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[64,64]) tuple(%ip, %ag)
+}
+%cond (arg: (s32[], f32[64,64])) -> pred[] {
+  %arg = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t = (s32[], f32[64,64]) tuple(%zero, %p)
+  %w = (s32[], f32[64,64]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %g = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    res = HloCostModel(hlo).analyze()
+    assert res["collective_bytes"]["all-reduce"] == 10 * 64 * 64 * 4
+    assert res["collective_counts"]["all-reduce"] == 10
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(
+        flops=197e12, hbm_bytes=819e9 / 2, collective_bytes_per_device=0,
+        n_devices=4, peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+    )
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["roofline_fraction"] - 1.0) < 1e-9

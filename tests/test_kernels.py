@@ -1,0 +1,137 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# masked syrk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r,w,k", [
+    (8, 16, 8), (16, 32, 16), (8, 256, 64), (5, 33, 24), (1, 8, 64), (24, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_syrk_shapes(r, w, k, dtype):
+    rng = np.random.default_rng(r * 1000 + w + k)
+    vm = jnp.asarray(rng.normal(size=(r, w, k)), dtype)
+    rv = jnp.asarray(rng.normal(size=(r, w)), dtype)
+    p1, b1 = ops.masked_syrk(vm, rv)
+    p2, b2 = ref.masked_syrk_ref(vm, rv)
+    np.testing.assert_allclose(p1, p2, rtol=2e-5, atol=3e-4)
+    np.testing.assert_allclose(b1, b2, rtol=2e-5, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.integers(1, 20), w=st.integers(1, 80), k=st.integers(1, 48),
+    seed=st.integers(0, 1000),
+)
+def test_syrk_property(r, w, k, seed):
+    rng = np.random.default_rng(seed)
+    vm = jnp.asarray(rng.normal(size=(r, w, k)), jnp.float32)
+    rv = jnp.asarray(rng.normal(size=(r, w)), jnp.float32)
+    p1, b1 = ops.masked_syrk(vm, rv)
+    p2, b2 = ref.masked_syrk_ref(vm, rv)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(b1, b2, rtol=1e-4, atol=1e-3)
+    # precision matrices are symmetric PSD by construction
+    np.testing.assert_allclose(p1, np.swapaxes(np.asarray(p1), 1, 2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused cholesky-solve-sample
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,k", [(16, 16), (32, 64), (7, 24), (1, 8), (64, 32)])
+def test_chol_solve_shapes(b, k):
+    rng = np.random.default_rng(b + k)
+    a = rng.normal(size=(b, k, k))
+    prec = jnp.asarray(a @ np.transpose(a, (0, 2, 1)) + (k * 0.1 + 0.5) * np.eye(k), jnp.float32)
+    rhs = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    x1 = ops.chol_solve_sample(prec, rhs, z)
+    x2 = ref.chol_solve_sample_ref(prec, rhs, z)
+    np.testing.assert_allclose(x1, x2, rtol=2e-3, atol=2e-3)
+
+
+def test_chol_solve_zero_noise_solves_system():
+    """With z = 0 the kernel output solves Lambda x = rhs exactly."""
+    rng = np.random.default_rng(5)
+    b, k = 8, 32
+    a = rng.normal(size=(b, k, k))
+    prec = jnp.asarray(a @ np.transpose(a, (0, 2, 1)) + 4.0 * np.eye(k), jnp.float32)
+    rhs = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    x = ops.chol_solve_sample(prec, rhs, jnp.zeros_like(rhs))
+    recon = jnp.einsum("bij,bj->bi", prec, x)
+    np.testing.assert_allclose(recon, rhs, rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bh,s,d,window,cap", [
+    (4, 128, 32, 0, 0.0),
+    (2, 256, 64, 64, 0.0),
+    (3, 128, 32, 0, 30.0),
+    (1, 384, 64, 128, 50.0),
+    (2, 200, 32, 0, 0.0),          # non-multiple S -> padding path
+])
+def test_flash_vs_ref(bh, s, d, window, cap):
+    rng = np.random.default_rng(s + d)
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=True, window=window, softcap=cap)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True, window=window, softcap=cap)
+    np.testing.assert_allclose(o1, o2, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-4), (jnp.bfloat16, 3e-2)])
+def test_flash_dtypes(dtype, tol):
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), dtype)
+    o1 = ops.flash_attention(q, k, v, causal=True)
+    o2 = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_matches_model_chunked_attention():
+    """The jnp chunked attention in models/layers.py is the second oracle."""
+    from repro.models.layers import multi_head_attention
+
+    rng = np.random.default_rng(3)
+    b, s, h, hd = 2, 256, 4, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    o_model = multi_head_attention(q, k, v, causal=True, chunk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    o_kernel = ops.flash_attention(qf, kf, vf, causal=True)
+    o_kernel = o_kernel.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(o_model, o_kernel, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused gather+syrk (V stays in HBM; rows gathered in-kernel)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r,w,n,k", [(8, 16, 40, 8), (16, 32, 100, 16), (5, 8, 20, 24)])
+def test_gather_syrk_fused_matches_two_step(r, w, n, k):
+    rng = np.random.default_rng(r + w + n)
+    idx = jnp.asarray(rng.integers(0, n, (r, w)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(r, w)), jnp.float32)
+    msk = jnp.asarray((rng.random((r, w)) > 0.3).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    p1, b1 = ops.gather_syrk(idx, val, msk, v)
+    vm = v[idx] * msk[..., None]
+    p2, b2 = ref.masked_syrk_ref(vm, val * msk)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(b1, b2, rtol=1e-4, atol=1e-3)
