@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   fig6   comm/compute overlap structure from compiled HLO
   rmse   accuracy parity across all samplers + ALS baseline (Sec 5.2 / 6)
   roofline  per-(arch x shape) dry-run roofline summary
+  serve  BPMF top-N serving qps + latency vs request batch size
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
-    from benchmarks import rmse_table, roofline
+    from benchmarks import rmse_table, roofline, serve_topn
 
     suites = [
         ("fig4", fig4_multicore.main),
@@ -23,6 +24,7 @@ def main() -> None:
         ("fig6", fig6_overlap.main),
         ("rmse", rmse_table.main),
         ("roofline", roofline.main),
+        ("serve", serve_topn.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

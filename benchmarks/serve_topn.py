@@ -1,0 +1,79 @@
+"""BPMF serving throughput: queries/sec and latency vs request batch size.
+
+    PYTHONPATH=src python benchmarks/serve_topn.py
+
+Scores a synthetic ensemble (no training needed — serving cost depends only
+on shapes) for several micro-batch sizes and reports queries/sec plus
+p50/p99 per-request latency. Larger batches amortise dispatch overhead at
+the cost of per-request latency — the same trade the LM decode path makes —
+so this table is the sizing input for the frontend's `max_batch`.
+
+Two engines per batch size:
+  xla      jnp matmul + lax.top_k, XLA-compiled — the CPU serving number
+  kernel   the Pallas streaming top-k in interpret mode — correctness path
+           on CPU (interpret mode is not a speed claim; on TPU the kernel
+           IS the serving path and never materialises the (B, N) scores)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+
+BATCH_SIZES = (8, 32, 128)
+N_ITEMS = 20_000
+N_SAMPLES = 8
+K = 16
+TOPK = 10
+ITERS = 30
+
+
+def _measure(fn, u, v, iters: int) -> tuple[float, float]:
+    out = fn(u, v, TOPK)
+    jax.block_until_ready(out)
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(u, v, TOPK))
+        lat.append(time.perf_counter() - t0)
+    lat = np.asarray(lat)
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def main() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    sk = N_SAMPLES * K  # flattened ensemble contraction axis (S*K)
+    v_flat = jnp.asarray(rng.normal(size=(N_ITEMS, sk)), jnp.float32)
+    xla_topn = jax.jit(ref.topn_scores_ref, static_argnums=2)
+    print(f"# catalogue {N_ITEMS} items, ensemble S={N_SAMPLES} k={K} "
+          f"(contraction {sk}), topk={TOPK}")
+    for batch in BATCH_SIZES:
+        u = jnp.asarray(rng.normal(size=(batch, sk)), jnp.float32)
+        p50, p99 = _measure(xla_topn, u, v_flat, ITERS)
+        row = csv_row(
+            f"serve_topn_xla_b{batch}", p50 * 1e6,
+            f"qps={batch/p50:,.0f} p50_ms={p50*1e3:.2f} p99_ms={p99*1e3:.2f}",
+        )
+        print(row)
+        rows.append(row)
+    # kernel correctness path, one shape (interpret mode is slow on CPU)
+    u = jnp.asarray(rng.normal(size=(8, sk)), jnp.float32)
+    p50, p99 = _measure(ops.topn_scores, u, v_flat, iters=3)
+    row = csv_row(
+        "serve_topn_kernel_b8", p50 * 1e6,
+        f"qps={8/p50:,.0f} p50_ms={p50*1e3:.2f} interpret=cpu",
+    )
+    print(row)
+    rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -1,4 +1,11 @@
 from repro.checkpoint.store import CheckpointStore
 from repro.checkpoint.elastic import restore_resharded
+from repro.checkpoint.samples import SAMPLE_KEYS, RetainedSample, SampleStore
 
-__all__ = ["CheckpointStore", "restore_resharded"]
+__all__ = [
+    "CheckpointStore",
+    "restore_resharded",
+    "SAMPLE_KEYS",
+    "RetainedSample",
+    "SampleStore",
+]

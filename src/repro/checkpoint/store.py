@@ -113,28 +113,39 @@ class CheckpointStore:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_arrays(self, step: int | None = None) -> dict[str, np.ndarray]:
+        """Read one checkpoint as {keystr path: host array} without a `like`
+        tree — the serving loader's entry point (the server does not know the
+        trainer's pytree structure, only the manifest)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.root}")
+        d = self.root / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        out = {
+            meta["path"]: _from_host(np.load(d / meta["file"]))
+            for meta in manifest["leaves"]
+        }
+        # insertion order == manifest order; paths are unique by construction
+        assert len(out) == len(manifest["leaves"])
+        return out
+
     def restore(self, like: Any, step: int | None = None, shardings: Any = None) -> Any:
         """Restore into the structure of `like` (shapes validated).
 
         `shardings`: optional pytree of jax.sharding.Sharding — enables
         restoring onto a different mesh (see checkpoint/elastic.py).
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.root}")
-        d = self.root / f"step_{step:010d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        raw = self.read_arrays(step)
         leaves, treedef = jax.tree_util.tree_flatten(like)
-        assert len(leaves) == len(manifest["leaves"]), (
-            len(leaves), len(manifest["leaves"]))
+        assert len(leaves) == len(raw), (len(leaves), len(raw))
         shard_leaves = (
             jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
         )
         out = []
-        for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
-            arr = _from_host(np.load(d / meta["file"]))
+        for i, (leaf, (path, arr)) in enumerate(zip(leaves, raw.items())):
             expected = tuple(getattr(leaf, "shape", arr.shape))
-            assert tuple(arr.shape) == expected, (meta["path"], arr.shape, expected)
+            assert tuple(arr.shape) == expected, (path, arr.shape, expected)
             if shard_leaves is not None:
                 out.append(jax.device_put(arr, shard_leaves[i]))
             else:

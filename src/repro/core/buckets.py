@@ -23,7 +23,8 @@ paper's stolen-work balance.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -53,7 +54,7 @@ class BucketPlan:
     buckets: tuple[Bucket, ...]
     nnz: int
     padded: int
-    empty_items: np.ndarray = field(default=None)  # items with no ratings
+    empty_items: Optional[np.ndarray] = None  # items with no ratings
 
     @property
     def padding_efficiency(self) -> float:

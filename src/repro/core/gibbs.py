@@ -103,20 +103,26 @@ def bucket_stats(
 
 
 def sample_mvn_precision(
-    key: jax.Array, prec: jax.Array, rhs: jax.Array, *, use_kernel: bool = False
+    key: jax.Array | None, prec: jax.Array, rhs: jax.Array,
+    *, use_kernel: bool = False
 ) -> jax.Array:
     """x ~ N(prec^-1 rhs, prec^-1), batched over the leading axis.
 
     Cholesky-only (no inverse): with prec = L L^T,
       mean = L^-T (L^-1 rhs),  x = mean + L^-T z.
+    key=None returns the posterior mean (the z = 0 limb of the same solve)
+    — the serving fold-in's deterministic mode.
     """
+    z = (
+        jnp.zeros_like(rhs)
+        if key is None
+        else jax.random.normal(key, rhs.shape, rhs.dtype)
+    )
     if use_kernel:
         from repro.kernels import ops as kops
 
-        z = jax.random.normal(key, rhs.shape, rhs.dtype)
         return kops.chol_solve_sample(prec, rhs, z)
     chol = jnp.linalg.cholesky(prec)
-    z = jax.random.normal(key, rhs.shape, rhs.dtype)
     y = jax.lax.linalg.triangular_solve(
         chol, rhs[..., None], left_side=True, lower=True
     )
@@ -296,10 +302,43 @@ class GibbsSampler:
         )
         return float(jnp.sqrt(jnp.mean((preds - self.test_vals) ** 2)))
 
-    def run(self, n_sweeps: int, seed: int = 0, verbose: bool = False) -> BPMFState:
+    def retain_sample(self, state: BPMFState, store) -> None:
+        """Persist the current draw into a checkpoint.SampleStore."""
+        store.retain(
+            int(state.step),
+            {
+                "u": np.asarray(state.u),
+                "v": np.asarray(state.v),
+                "hyper_u_mu": np.asarray(state.hyper_u.mu),
+                "hyper_u_lam": np.asarray(state.hyper_u.lam),
+                "hyper_v_mu": np.asarray(state.hyper_v.mu),
+                "hyper_v_lam": np.asarray(state.hyper_v.lam),
+                "global_mean": np.asarray(self.global_mean, np.float32),
+                "alpha": np.asarray(self.alpha, np.float32),
+            },
+        )
+
+    def run(
+        self,
+        n_sweeps: int,
+        seed: int = 0,
+        verbose: bool = False,
+        *,
+        store=None,
+        thin: int = 1,
+    ) -> BPMFState:
+        """Run the chain; with `store` (a checkpoint.SampleStore), retain every
+        `thin`-th post-burn-in draw — the train -> checkpoint -> serve handoff.
+        """
+        if thin < 1:
+            raise ValueError(f"thin must be >= 1, got {thin}")
         state = self.init(seed)
         for i in range(n_sweeps):
             state = self.sweep(state)
+            if store is not None and i >= self.burn_in and (i - self.burn_in) % thin == 0:
+                self.retain_sample(state, store)
             if verbose and (i % 5 == 0 or i == n_sweeps - 1):
                 print(f"sweep {i:3d}  sample-rmse {self.sample_rmse(state):.4f}")
+        if store is not None:
+            store.wait()
         return state

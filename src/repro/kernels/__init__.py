@@ -7,6 +7,7 @@ Cholesky-based solve, Sec 3.1); these are the corresponding TPU kernels:
   bpmf_gather_syrk.py fused gather+syrk — V stays in HBM, gathered in-kernel
                       (halves the update sweep's dominant traffic)
   chol_solve.py       fused batched Cholesky factor + solve + sample
+  bpmf_topn.py        tiled U @ V^T scoring + streaming top-k (BPMF serving)
   flash_attention.py  tiled online-softmax attention (LM serving/training)
 
 Each kernel ships three layers:

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: tiled U @ V^T scoring with streaming top-k.
+
+The BPMF serving hot loop scores a user batch against the full item catalogue
+and keeps only the N best items per user:
+
+    scores = U_batch @ V^T            (B, N) — never materialised
+    top-k over the item axis          (B, TOPK) values + indices
+
+Materialising (B, N) for millions of items blows HBM and wastes bandwidth on
+scores that are immediately discarded. Instead the grid tiles the item axis:
+each step computes one (B_blk, N_blk) score tile on the MXU and folds it into
+a running (B_blk, TOPK) candidate list held in the output refs, so only the
+candidates ever leave VMEM. The item axis is the fastest-varying grid
+dimension (sequential on TPU), which makes the in-place merge race-free.
+
+Tie-breaking matches `jax.lax.top_k` bit-for-bit: the running list (earlier,
+i.e. lower, item indices) is placed before the fresh tile in the merge and
+`lax.top_k` is stable, so equal scores resolve to the lowest item index —
+the same order a monolithic top_k over the full score row would produce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topn_kernel(u_ref, v_ref, val_ref, idx_ref, *, topk: int, n_valid: int,
+                 block_n: int):
+    j = pl.program_id(1)
+    u = u_ref[...]                                 # (BB, K)
+    v = v_ref[...]                                 # (BN, K)
+    scores = jax.lax.dot_general(
+        u, v,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (BB, BN)
+    cols = j * block_n + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(cols < n_valid, scores, -jnp.inf)
+
+    @pl.when(j == 0)
+    def _first():
+        vals, pos = jax.lax.top_k(scores, topk)
+        val_ref[...] = vals
+        idx_ref[...] = jnp.take_along_axis(cols, pos, axis=1)
+
+    @pl.when(j > 0)
+    def _merge():
+        cand_v = jnp.concatenate([val_ref[...], scores], axis=1)
+        cand_i = jnp.concatenate([idx_ref[...], cols], axis=1)
+        vals, pos = jax.lax.top_k(cand_v, topk)
+        val_ref[...] = vals
+        idx_ref[...] = jnp.take_along_axis(cand_i, pos, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topk", "n_valid", "block_b", "block_n", "interpret"),
+)
+def topn_scores_pallas(
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    topk: int,
+    n_valid: int,
+    block_b: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """u: (B, K), v: (N, K) -> (values (B, topk) f32, indices (B, topk) i32).
+
+    B must divide by block_b and N by block_n; rows of v at index >= n_valid
+    are padding and never selected (ops.py pads). topk <= block_n so the
+    first tile alone can seed the candidate list.
+    """
+    b, k = u.shape
+    n = v.shape[0]
+    assert b % block_b == 0 and n % block_n == 0, (b, n, block_b, block_n)
+    assert topk <= block_n, (topk, block_n)
+    assert topk <= n_valid <= n, (topk, n_valid, n)
+    grid = (b // block_b, n // block_n)
+    kernel = functools.partial(
+        _topn_kernel, topk=topk, n_valid=n_valid, block_n=block_n
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, topk), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, topk), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, topk), jnp.float32),
+            jax.ShapeDtypeStruct((b, topk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u, v)

@@ -90,6 +90,37 @@ def flash_attention(
     return out[:, :sq]
 
 
+def topn_scores(u: jax.Array, v: jax.Array, topk: int,
+                *, interpret: bool | None = None):
+    """Batched top-k of U @ V^T without materialising the (B, N) score matrix.
+
+    u: (B, K) user factors, v: (N, K) item factors -> (values (B, topk),
+    indices (B, topk)). Pads B/N to tile multiples; padded items are masked
+    to -inf inside the kernel so they are never recommended. Matches
+    `jax.lax.top_k` over the full score row bit-for-bit (stable ties) when
+    B is a tile multiple; a padded batch can flip last-bit score rounding
+    (XLA picks a different gemm micro-kernel per M) but never the selection.
+    """
+    from repro.kernels.bpmf_topn import topn_scores_pallas
+
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, k = u.shape
+    n = v.shape[0]
+    if not 0 < topk <= n:
+        raise ValueError(f"topk must be in [1, {n}], got {topk}")
+    block_b = 8
+    block_n = 128
+    while block_n < topk:
+        block_n *= 2
+    u_p = _pad_to(u, 0, block_b)
+    v_p = _pad_to(v, 0, block_n)
+    vals, idx = topn_scores_pallas(
+        u_p, v_p, topk=topk, n_valid=n,
+        block_b=block_b, block_n=block_n, interpret=interpret,
+    )
+    return vals[:b], idx[:b]
+
+
 def gather_syrk(indices: jax.Array, values: jax.Array, mask: jax.Array,
                 v: jax.Array, *, interpret: bool | None = None):
     """Fused gather+syrk: V stays in HBM, rows gathered in-kernel (R % 8 pad).

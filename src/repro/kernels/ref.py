@@ -25,6 +25,18 @@ def chol_solve_sample_ref(prec: jax.Array, rhs: jax.Array, z: jax.Array) -> jax.
     return x[..., 0]
 
 
+def topn_scores_ref(
+    u: jax.Array, v: jax.Array, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """Monolithic U @ V^T then jax.lax.top_k — the bit-for-bit oracle."""
+    scores = jax.lax.dot_general(
+        u, v,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return jax.lax.top_k(scores, topk)
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

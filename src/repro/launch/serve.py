@@ -1,16 +1,25 @@
-"""Serving launcher: batched prefill + decode steps for any architecture.
+"""Serving launcher: LM decode serving and BPMF recommendation serving.
+
+LM mode (batched prefill + decode for any architecture):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
         --batch 4 --prompt-len 64 --max-new 32
 
-Builds the jitted prefill/decode pair (the same functions the dry-run lowers
-onto the production meshes), runs a greedy generation loop, and reports
-tokens/sec. With --reduced it runs the smoke-size config on the host; without
-it, it expects a TPU slice.
+BPMF mode (posterior-predictive top-N from retained Gibbs samples):
+
+    PYTHONPATH=src python -m repro.launch.serve --bpmf --samples /path/to/dir \
+        --requests 256 --max-batch 32 --topk 10
+
+BPMF serving drives the request-batching frontend (repro.serve): requests
+are micro-batched, scored by the Pallas streaming top-k kernel against the
+item-factor cache (keyed by sample epoch, sharded over the host mesh), and
+the run reports queries/sec plus p50/p99 latency. Without --samples it
+trains a small synthetic model first so the command works standalone.
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -28,6 +37,64 @@ def build_serving(cfg, max_new: int):
     return model, prefill, decode
 
 
+def train_demo_samples(root: str, *, seed: int = 0) -> "SparseRatings":
+    """Train a small synthetic BPMF model and retain samples under `root`.
+
+    Returns the training ratings (the serve-side seen-item filter).
+    """
+    from repro.checkpoint import SampleStore
+    from repro.core import GibbsSampler
+    from repro.data import movielens_like, train_test_split
+
+    ratings, _, _ = movielens_like(scale=0.002, seed=seed)
+    train, test = train_test_split(ratings, 0.1, seed=seed + 1)
+    sampler = GibbsSampler(train, test, k=16, alpha=4.0, burn_in=6,
+                           widths=(8, 32, 128))
+    store = SampleStore(root, keep=8)
+    sampler.run(14, seed=seed, store=store)
+    return train
+
+
+def bpmf_main(args) -> None:
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import RecommendFrontend
+
+    seen = None
+    root = args.samples
+    if root is None:
+        root = tempfile.mkdtemp(prefix="bpmf_samples_")
+        print(f"no --samples given; training a demo model into {root}")
+        seen = train_demo_samples(root)
+
+    mesh = make_host_mesh()
+    fe = RecommendFrontend(root, seen=seen, max_batch=args.max_batch, mesh=mesh)
+    ens = fe.ensemble
+    print(f"ensemble: {ens.n_samples} samples, {ens.n_users} users x "
+          f"{ens.n_items} items, k={ens.k}, epoch={fe.epoch} "
+          f"({len(mesh.devices.flatten())} device(s))")
+
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, ens.n_users, args.requests)
+    # warm the kernel cache at the *serving* batch shape (jit specialises on
+    # the padded batch size, so a batch-of-1 warm-up would leave the first
+    # timed flush paying compilation)
+    for u in users[: args.max_batch]:
+        fe.submit(int(u), topk=args.topk)
+    fe.flush()
+    fe.latencies_s.clear()
+    t0 = time.perf_counter()
+    served = 0
+    for u in users:
+        fe.submit(int(u), topk=args.topk)
+        if fe.pending >= args.max_batch:
+            served += len(fe.flush())
+    served += len(fe.flush())
+    dt = time.perf_counter() - t0
+    lat = fe.latency_percentiles()
+    print(f"served {served} requests in {dt:.3f}s -> {served/dt:,.0f} qps  "
+          f"p50 {lat['p50']*1e3:.2f} ms  p99 {lat['p99']*1e3:.2f} ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
@@ -36,7 +103,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--bpmf", action="store_true",
+                    help="serve BPMF recommendations instead of an LM")
+    ap.add_argument("--samples", default=None,
+                    help="SampleStore directory of retained Gibbs draws")
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=32)
     args = ap.parse_args()
+
+    if args.bpmf:
+        bpmf_main(args)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -1,0 +1,28 @@
+"""BPMF posterior-predictive serving: the path from retained Gibbs samples
+to live recommendations.
+
+Training (core/gibbs.py) retains post-burn-in draws in a checkpoint
+SampleStore; this package turns them into a service:
+
+  ensemble.py   PosteriorEnsemble — stacked (U_s, V_s, hyper_s) draws,
+                posterior-mean scores + predictive variance per (user, item)
+  topn.py       TopNRecommender — batched top-N over the catalogue, backed
+                by the Pallas streaming top-k kernel (kernels/bpmf_topn.py)
+  foldin.py     cold-start fold-in — one-shot conditional posterior for a
+                user unseen at train time, from their ratings alone
+  frontend.py   RecommendFrontend — request micro-batching + an item-factor
+                cache keyed by sample epoch, sharded over launch/mesh.py
+"""
+from repro.serve.ensemble import PosteriorEnsemble
+from repro.serve.foldin import fold_in
+from repro.serve.frontend import RecommendFrontend, RecommendResult
+from repro.serve.topn import SeenIndex, TopNRecommender
+
+__all__ = [
+    "PosteriorEnsemble",
+    "fold_in",
+    "RecommendFrontend",
+    "RecommendResult",
+    "SeenIndex",
+    "TopNRecommender",
+]

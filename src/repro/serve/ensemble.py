@@ -1,0 +1,137 @@
+"""Ensemble scorer over retained BPMF posterior samples.
+
+The posterior-predictive rating of (i, j) under S retained Gibbs draws is
+
+    p(r_ij | R) ~= 1/S sum_s N(r_ij ; u_i^s . v_j^s + mean, 1/alpha)
+
+so the served score is the sample average of the per-draw dot products and
+the predictive variance decomposes into epistemic (variance of the dot
+product across draws) + aleatoric (1/alpha observation noise). The standard
+error of the served *mean* shrinks as 1/S — more retained samples buy a
+tighter score, which is the knob the ROADMAP's online-refresh follow-up
+turns.
+
+A key serving identity: the posterior-mean score is itself one matmul,
+
+    1/S sum_s U_s V_s^T  =  U' V'^T,   U' = [U_1/S .. U_S/S],  V' = [V_1 .. V_S]
+
+(concatenation along K). `scoring_matrices()` exposes exactly that (B, S*K)
+/ (N, S*K) pair, which is what the Pallas top-N kernel consumes — ensemble
+averaging costs nothing beyond a wider contraction axis.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.samples import RetainedSample, SampleStore
+
+
+class PosteriorEnsemble:
+    """Stacked retained draws, device-resident, ready to score."""
+
+    def __init__(self, samples: Sequence[RetainedSample]):
+        if not samples:
+            raise ValueError("ensemble needs at least one retained sample")
+        shapes = {(s.u.shape, s.v.shape) for s in samples}
+        if len(shapes) != 1:
+            raise ValueError(f"inconsistent sample shapes: {shapes}")
+        self.samples = tuple(samples)
+        self.u = jnp.stack([jnp.asarray(s.u) for s in samples])  # (S, M, K)
+        self.v = jnp.stack([jnp.asarray(s.v) for s in samples])  # (S, N, K)
+        self.global_mean = float(samples[-1].global_mean)
+        self.alpha = float(samples[-1].alpha)
+        self.epoch = int(samples[-1].step)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def load(cls, root: str | Path, *, max_samples: int | None = None
+             ) -> "PosteriorEnsemble":
+        """Load the retained draws under `root` (newest `max_samples`).
+
+        Tolerates a co-running trainer pruning old draws mid-load (see
+        SampleStore.load_all); only draws that survive the race are stacked.
+        """
+        store = SampleStore(root)
+        return cls(store.load_all(max_samples))
+
+    @property
+    def n_samples(self) -> int:
+        return self.u.shape[0]
+
+    @property
+    def n_users(self) -> int:
+        return self.u.shape[1]
+
+    @property
+    def n_items(self) -> int:
+        return self.v.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.u.shape[2]
+
+    # ------------------------------------------------------------------
+    def score(
+        self, users: jax.Array, items: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Posterior mean + predictive variance for (user, item) pairs.
+
+        users, items: (B,) int32 -> (mean (B,), var (B,)). Variance is
+        epistemic (across draws) + aleatoric (1/alpha); the epistemic part
+        uses the unbiased estimator when S > 1.
+        """
+        per_draw = self._pair_scores(self.u, self.v, users, items)
+        return self._moments(per_draw)
+
+    def score_factors(
+        self, u_draws: jax.Array, items: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Like score() but for explicit per-draw user factors (S, B, K) —
+        the fold-in path, where the user has no row in U."""
+        per_draw = (
+            jnp.einsum("sbk,sbk->sb", u_draws, self.v[:, items])
+            + self.global_mean
+        )
+        return self._moments(per_draw)
+
+    def mean_stderr(
+        self, users: jax.Array, items: jax.Array
+    ) -> jax.Array:
+        """Standard error of the served posterior-mean score (shrinks ~1/S)."""
+        per_draw = self._pair_scores(self.u, self.v, users, items)
+        s = per_draw.shape[0]
+        var = jnp.var(per_draw, axis=0, ddof=1 if s > 1 else 0)
+        return jnp.sqrt(var / s)
+
+    def _pair_scores(self, u, v, users, items) -> jax.Array:
+        return (
+            jnp.einsum("smk,smk->sm", u[:, users], v[:, items])
+            + self.global_mean
+        )
+
+    def _moments(self, per_draw: jax.Array) -> tuple[jax.Array, jax.Array]:
+        s = per_draw.shape[0]
+        mean = per_draw.mean(0)
+        epistemic = jnp.var(per_draw, axis=0, ddof=1 if s > 1 else 0)
+        return mean, epistemic + 1.0 / self.alpha
+
+    # ------------------------------------------------------------------
+    def scoring_matrices(self) -> tuple[jax.Array, jax.Array]:
+        """(U' (M, S*K), V' (N, S*K)) with U' V'^T = posterior-mean scores
+        minus the global mean — the flattened form the top-N kernel eats."""
+        s, m, k = self.u.shape
+        u_flat = (self.u / s).transpose(1, 0, 2).reshape(m, s * k)
+        v_flat = self.v.transpose(1, 0, 2).reshape(self.n_items, s * k)
+        return u_flat, v_flat
+
+    def user_scoring_rows(self, u_draws: jax.Array) -> jax.Array:
+        """Flatten explicit per-draw user factors (S, B, K) -> (B, S*K) rows
+        compatible with scoring_matrices()' V' — used to score fold-in users
+        through the same kernel as trained users."""
+        s, b, k = u_draws.shape
+        return (u_draws / s).transpose(1, 0, 2).reshape(b, s * k)

@@ -1,0 +1,90 @@
+"""Cold-start fold-in: a one-shot conditional posterior for unseen users.
+
+A user who arrives after training has no row in any retained U_s, but the
+BPMF model still defines their conditional posterior given each draw's item
+factors and user hyperparameters:
+
+    Lambda_b^s = Lambda_u^s + alpha * sum_j v_j^s v_j^s^T   (j rated by b)
+    rhs_b^s    = Lambda_u^s mu_u^s + alpha * sum_j r_bj v_j^s
+    u_b^s      ~ N((Lambda_b^s)^-1 rhs_b^s, (Lambda_b^s)^-1)
+
+— exactly the per-item update of the training sweep (posterior propagation
+in the sense of Qin et al. 2017: the retained draws carry the training
+posterior, and the new user's factor is inferred conditionally without
+touching the chain). The implementation therefore *reuses* the training
+machinery verbatim: ratings are bucketed with core.buckets.plan_buckets,
+sufficient statistics come from core.gibbs.bucket_stats, and the draw (or
+posterior mean, z = 0) from core.gibbs.sample_mvn_precision. One fold-in
+per retained draw yields an (S, B, K) factor ensemble that the scorer and
+recommender treat identically to trained users.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buckets import plan_buckets
+from repro.core.gibbs import bucket_stats, device_plan, sample_mvn_precision
+from repro.data.sparse import SparseRatings, csr_from_coo
+from repro.serve.ensemble import PosteriorEnsemble
+
+
+def _ratings_stats(v: jax.Array, buckets, n_new: int,
+                   use_kernel: bool) -> tuple[jax.Array, jax.Array]:
+    """Accumulate (sum v v^T, sum r v) per new user via the bucket plan."""
+    k = v.shape[-1]
+    prec = jnp.zeros((n_new, k, k), v.dtype)
+    rhs = jnp.zeros((n_new, k), v.dtype)
+    for b in buckets:
+        p, r = bucket_stats(v, b, use_kernel=use_kernel)
+        prec = prec.at[b.seg_item_ids].add(p)
+        rhs = rhs.at[b.seg_item_ids].add(r)
+    return prec, rhs
+
+
+def fold_in(
+    key: jax.Array | None,
+    ratings: SparseRatings,
+    ensemble: PosteriorEnsemble,
+    *,
+    sample: bool = True,
+    widths: tuple[int, ...] = (8, 32, 128, 512),
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Factor posteriors for a batch of new users from their ratings alone.
+
+    ratings: (n_new, n_items) sparse — row b holds new user b's ratings on
+    the *training* item index space, on the raw rating scale (the training
+    global mean is subtracted here). Returns (S, n_new, K) per-draw factors:
+    conditional draws when sample=True, conditional posterior means (z = 0,
+    key may be None) when False. Feed them to
+    PosteriorEnsemble.score_factors or TopNRecommender.recommend_factors.
+    """
+    n_new, n_items = ratings.shape
+    if n_items != ensemble.n_items:
+        raise ValueError(
+            f"ratings cover {n_items} items, ensemble has {ensemble.n_items}"
+        )
+    # out-of-range item ids would otherwise be silently clamped by the gather
+    ratings.validate()
+    centered = (ratings.vals - ensemble.global_mean).astype(np.float32)
+    indptr, idx, vals = csr_from_coo(ratings.rows, ratings.cols, centered, n_new)
+    plan = plan_buckets(indptr, idx, vals, n_new, n_items, widths)
+    buckets = device_plan(plan)
+    alpha = ensemble.alpha
+
+    out = []
+    for s, smp in enumerate(ensemble.samples):
+        v = ensemble.v[s]
+        lam = jnp.asarray(smp.hyper_u_lam)
+        mu = jnp.asarray(smp.hyper_u_mu)
+        prec, rhs = _ratings_stats(v, buckets, n_new, use_kernel)
+        prec = lam[None] + alpha * prec
+        rhs = (lam @ mu)[None] + alpha * rhs
+        if sample:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None  # posterior mean: the z = 0 limb of the same solve
+        out.append(sample_mvn_precision(sub, prec, rhs, use_kernel=use_kernel))
+    return jnp.stack(out)  # (S, n_new, K)

@@ -1,0 +1,236 @@
+"""Request-batching serving front end for BPMF recommendations.
+
+Serving traffic arrives as single-user requests; the kernel wants batches.
+The frontend queues requests (thread-safe), then `flush()` drains the queue
+in micro-batches of up to `max_batch`, one kernel invocation per batch —
+the same amortisation the LM serving path gets from batched decode steps.
+Cold-start requests (raw ratings instead of a user id) ride the same queue:
+each flush folds them in against the current ensemble and scores them
+through the same top-N kernel as trained users.
+
+The item-factor cache is keyed by *sample epoch* — the newest retained step
+in the SampleStore. `refresh()` compares epochs and only then rebuilds the
+ensemble + re-shards V' across the mesh devices; between training publishes
+(or when no trainer is running) serving never touches the checkpoint
+directory again. The previous epoch's recommender is kept until the swap
+completes, so refresh is safe to call from a poller thread while requests
+are in flight.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from repro.checkpoint.samples import SampleStore
+from repro.data.sparse import SparseRatings
+from repro.serve.ensemble import PosteriorEnsemble
+from repro.serve.foldin import fold_in
+from repro.serve.topn import SeenIndex, TopNRecommender
+
+
+@dataclass(frozen=True)
+class RecommendResult:
+    ticket: int
+    items: np.ndarray    # (topk,) int32, -1 padded
+    scores: np.ndarray   # (topk,) f32 posterior-mean scores
+    epoch: int           # sample epoch that served the request
+    latency_s: float     # enqueue -> result
+
+
+@dataclass
+class _Pending:
+    ticket: int
+    topk: int
+    t_enqueue: float
+    user_id: int | None = None
+    item_ids: np.ndarray | None = None   # cold-start payload
+    ratings: np.ndarray | None = None
+
+
+class RecommendFrontend:
+    def __init__(
+        self,
+        sample_root: str | Path,
+        *,
+        seen: SparseRatings | None = None,
+        max_batch: int = 32,
+        max_samples: int | None = None,
+        devices=None,
+        mesh=None,
+        interpret: bool | None = None,
+    ):
+        """seen: training ratings used to exclude already-rated items.
+        devices / mesh: where to shard the item factors — a mesh contributes
+        its "data"-axis devices (launch/mesh.py), default all local devices.
+        """
+        self.store = SampleStore(sample_root)
+        self.seen = SeenIndex(seen) if seen is not None else None
+        self.max_batch = max_batch
+        self.max_samples = max_samples
+        if mesh is not None and devices is None:
+            devices = list(mesh.devices.flatten())
+        self.devices = devices if devices is not None else jax.devices()
+        self.interpret = interpret
+        self._lock = threading.Lock()
+        self._queue: list[_Pending] = []
+        self._ticket = 0
+        self._epoch: int | None = None
+        self._recommender: TopNRecommender | None = None
+        # bounded: a long-lived server must not grow one float per request
+        self.latencies_s: collections.deque[float] = collections.deque(maxlen=65536)
+        self.refresh()
+
+    # ------------------------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        assert self._epoch is not None
+        return self._epoch
+
+    @property
+    def ensemble(self) -> PosteriorEnsemble:
+        return self._recommender.ensemble
+
+    def refresh(self) -> bool:
+        """Adopt the newest sample epoch; True if the cache was rebuilt."""
+        newest = self.store.epoch()
+        if newest is None:
+            raise FileNotFoundError(f"no retained samples in {self.store.store.root}")
+        if newest == self._epoch:
+            return False
+        try:
+            ensemble = PosteriorEnsemble.load(
+                self.store.store.root, max_samples=self.max_samples
+            )
+        except (FileNotFoundError, ValueError):
+            # lost the race against the trainer's prune wholesale — keep
+            # serving the cached epoch and let the next poll retry
+            if self._recommender is not None:
+                return False
+            raise
+        recommender = TopNRecommender(
+            ensemble, devices=self.devices, interpret=self.interpret
+        )
+        with self._lock:
+            self._epoch = ensemble.epoch
+            self._recommender = recommender
+        return True
+
+    # ------------------------------------------------------------------
+    def submit(self, user_id: int, topk: int = 10) -> int:
+        """Queue a trained-user request; returns a ticket matched by flush()."""
+        n_users = self.ensemble.n_users
+        if not 0 <= user_id < n_users:
+            # reject at enqueue (like submit_ratings): an out-of-range id
+            # would otherwise clamp to another user's recommendations, or
+            # crash the whole micro-batch in the seen-item lookup
+            raise ValueError(f"user id must be in [0, {n_users}), got {user_id}")
+        with self._lock:
+            self._ticket += 1
+            self._queue.append(_Pending(
+                ticket=self._ticket, topk=topk, t_enqueue=time.perf_counter(),
+                user_id=int(user_id),
+            ))
+            return self._ticket
+
+    def submit_ratings(
+        self, item_ids: np.ndarray, ratings: np.ndarray, topk: int = 10
+    ) -> int:
+        """Queue a cold-start request: the user's ratings, not a user id."""
+        item_ids = np.asarray(item_ids, np.int32)
+        ratings = np.asarray(ratings, np.float32)
+        assert item_ids.shape == ratings.shape
+        n_items = self.ensemble.n_items
+        if item_ids.size and not (0 <= item_ids.min() and item_ids.max() < n_items):
+            # reject here, not at flush: one bad request must not poison the
+            # whole micro-batch it would be folded in with
+            raise ValueError(
+                f"item ids must be in [0, {n_items}), got "
+                f"[{item_ids.min()}, {item_ids.max()}]"
+            )
+        with self._lock:
+            self._ticket += 1
+            self._queue.append(_Pending(
+                ticket=self._ticket, topk=topk, t_enqueue=time.perf_counter(),
+                item_ids=item_ids, ratings=ratings,
+            ))
+            return self._ticket
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # ------------------------------------------------------------------
+    def flush(self) -> list[RecommendResult]:
+        """Drain the queue in micro-batches; returns results ticket-matched."""
+        with self._lock:
+            batch_all, self._queue = self._queue, []
+            rec = self._recommender
+            epoch = self._epoch
+        results: list[RecommendResult] = []
+        for lo in range(0, len(batch_all), self.max_batch):
+            results.extend(self._run_batch(batch_all[lo: lo + self.max_batch],
+                                           rec, epoch))
+        self.latencies_s.extend(r.latency_s for r in results)
+        return results
+
+    def _run_batch(self, batch: list[_Pending], rec: TopNRecommender,
+                   epoch: int) -> list[RecommendResult]:
+        if not batch:
+            return []
+        topk = max(p.topk for p in batch)
+        warm = [p for p in batch if p.user_id is not None]
+        cold = [p for p in batch if p.user_id is None]
+        out: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+        if warm:
+            ids = np.asarray([p.user_id for p in warm], np.int32)
+            vals, idx = rec.recommend(ids, topk, seen=self.seen)
+            for r, p in enumerate(warm):
+                out[p.ticket] = (vals[r], idx[r])
+
+        if cold:
+            rows = np.concatenate([
+                np.full(len(p.item_ids), r, np.int32) for r, p in enumerate(cold)
+            ])
+            cols = np.concatenate([p.item_ids for p in cold])
+            vals_r = np.concatenate([p.ratings for p in cold])
+            ratings = SparseRatings(
+                rows=rows, cols=cols, vals=vals_r,
+                shape=(len(cold), rec.ensemble.n_items),
+            )
+            # deterministic fold-in (conditional posterior means): serving
+            # the same ratings twice must return the same recommendations
+            u_draws = fold_in(None, ratings, rec.ensemble, sample=False)
+            vals, idx = rec.recommend_factors(
+                u_draws, topk, exclude=[p.item_ids for p in cold]
+            )
+            for r, p in enumerate(cold):
+                out[p.ticket] = (vals[r], idx[r])
+
+        t_done = time.perf_counter()
+        return [
+            RecommendResult(
+                ticket=p.ticket,
+                items=out[p.ticket][1][: p.topk],
+                scores=out[p.ticket][0][: p.topk],
+                epoch=epoch,
+                latency_s=t_done - p.t_enqueue,
+            )
+            for p in batch
+        ]
+
+    # ------------------------------------------------------------------
+    def latency_percentiles(self) -> dict[str, float]:
+        """p50/p99 over every request served so far (seconds)."""
+        if not self.latencies_s:
+            return {"p50": float("nan"), "p99": float("nan")}
+        lat = np.asarray(self.latencies_s)
+        return {"p50": float(np.percentile(lat, 50)),
+                "p99": float(np.percentile(lat, 99))}

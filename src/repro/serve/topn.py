@@ -1,0 +1,171 @@
+"""Batched top-N recommendation over the full item catalogue.
+
+Wraps the Pallas streaming top-k kernel (kernels/bpmf_topn.py) around the
+ensemble's flattened scoring matrices. Two serving concerns live here:
+
+* Seen-item exclusion. Users should not be recommended items they already
+  rated. Rated sets are tiny next to the catalogue, so the kernel fetches
+  topk + max(batch rated counts) candidates and the host drops the seen ones
+  — cheaper than materialising a (B, N) mask the kernel would have to read.
+
+* Item sharding. V' is split row-wise into `n_shards` chunks (one per mesh
+  device when a mesh is given, mirroring launch/mesh.py's "data" axis). Each
+  shard streams its chunk through the kernel independently; the per-shard
+  candidate lists (values + global indices) are merged with one more stable
+  top-k, the same merge the kernel itself applies across item tiles. On a
+  real slice each shard's kernel runs on its own device against its resident
+  chunk — scoring scales with devices while the merge stays O(shards * topk).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.sparse import SparseRatings, csr_from_coo
+from repro.kernels import ops
+from repro.serve.ensemble import PosteriorEnsemble
+
+
+class SeenIndex:
+    """One-time CSR index over the training matrix: O(degree) lookup of a
+    user's rated items, vs the O(nnz) boolean scan a COO filter would cost
+    on every request batch."""
+
+    def __init__(self, ratings: SparseRatings):
+        self.indptr, self.cols, _ = csr_from_coo(
+            ratings.rows, ratings.cols, ratings.vals, ratings.shape[0]
+        )
+        self.max_degree = int(np.diff(self.indptr).max(initial=0))
+
+    def __getitem__(self, user: int) -> np.ndarray:
+        return self.cols[self.indptr[user]: self.indptr[user + 1]]
+
+
+def _merge_topk(vals: jax.Array, idx: jax.Array, topk: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard candidates (B, C) keeping lax.top_k's stable order.
+
+    Shards hold disjoint, ascending index ranges and are concatenated in
+    range order, so position-stable top_k again resolves ties to the lowest
+    global item index.
+    """
+    v, pos = jax.lax.top_k(vals, topk)
+    return v, jnp.take_along_axis(idx, pos, axis=1)
+
+
+class TopNRecommender:
+    def __init__(
+        self,
+        ensemble: PosteriorEnsemble,
+        *,
+        n_shards: int = 1,
+        devices=None,
+        interpret: bool | None = None,
+    ):
+        self.ensemble = ensemble
+        self.interpret = interpret
+        u_flat, v_flat = ensemble.scoring_matrices()
+        self.u_flat = u_flat  # (M, S*K) trained-user scoring rows
+        if devices is not None:
+            n_shards = len(devices)
+        self.n_shards = max(1, min(n_shards, v_flat.shape[0]))
+        bounds = np.linspace(0, v_flat.shape[0], self.n_shards + 1).astype(int)
+        self.shard_offsets = bounds[:-1]
+        self.v_shards = []
+        for i in range(self.n_shards):
+            chunk = v_flat[bounds[i]: bounds[i + 1]]
+            if devices is not None:
+                chunk = jax.device_put(chunk, devices[i % len(devices)])
+            self.v_shards.append(chunk)
+
+    # ------------------------------------------------------------------
+    def _topk_rows(self, rows: jax.Array, topk: int
+                   ) -> tuple[jax.Array, jax.Array]:
+        """Kernel top-k of rows @ V'^T across all item shards."""
+        topk = min(topk, self.ensemble.n_items)
+        vals, idx = [], []
+        for off, chunk in zip(self.shard_offsets, self.v_shards):
+            k_eff = min(topk, chunk.shape[0])
+            v, i = ops.topn_scores(rows, chunk, k_eff, interpret=self.interpret)
+            vals.append(v)
+            idx.append(i + np.int32(off))
+        if len(vals) == 1:
+            return vals[0], idx[0]
+        return _merge_topk(jnp.concatenate(vals, 1), jnp.concatenate(idx, 1), topk)
+
+    def recommend_rows(
+        self,
+        rows: jax.Array,
+        topk: int,
+        *,
+        exclude: list[np.ndarray] | None = None,
+        fetch_hint: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for explicit scoring rows (B, S*K).
+
+        exclude: optional per-row arrays of item ids to drop (seen items).
+        fetch_hint: a batch-independent upper bound on topk + exclusions
+        (e.g. topk + SeenIndex.max_degree) — pins the candidate count so the
+        serving hot path compiles exactly one kernel shape per topk.
+        Returns host arrays (values (B, topk), indices (B, topk)); rows with
+        fewer than topk candidates left are padded with (-inf, -1).
+        """
+        b = rows.shape[0]
+        fetch = topk
+        if exclude is not None:
+            assert len(exclude) == b, (len(exclude), b)
+            fetch = topk + max((len(e) for e in exclude), default=0)
+            if fetch_hint is not None:
+                fetch = max(fetch, fetch_hint)
+            # round up to a power of two: candidate count changes per batch,
+            # quantizing it keeps the jit cache to O(log n_items) entries
+            fetch = 1 << (fetch - 1).bit_length()
+            fetch = min(fetch, self.ensemble.n_items)
+        vals, idx = self._topk_rows(rows, fetch)
+        vals = np.asarray(vals) + self.ensemble.global_mean
+        idx = np.asarray(idx)
+        if exclude is None:
+            return vals[:, :topk], idx[:, :topk]
+        out_v = np.full((b, topk), -np.inf, np.float32)
+        out_i = np.full((b, topk), -1, np.int32)
+        for r in range(b):
+            keep = ~np.isin(idx[r], exclude[r])
+            kept_v, kept_i = vals[r][keep][:topk], idx[r][keep][:topk]
+            out_v[r, : len(kept_v)] = kept_v
+            out_i[r, : len(kept_i)] = kept_i
+        return out_v, out_i
+
+    # ------------------------------------------------------------------
+    def recommend(
+        self,
+        user_ids: np.ndarray,
+        topk: int,
+        *,
+        seen: SparseRatings | SeenIndex | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for trained users. `seen` excludes each user's already-rated
+        items; pass a prebuilt SeenIndex on the serving hot path (a raw
+        SparseRatings is indexed from scratch on every call)."""
+        user_ids = np.asarray(user_ids, np.int32)
+        rows = self.u_flat[user_ids]
+        exclude = None
+        fetch_hint = None
+        if seen is not None:
+            if isinstance(seen, SparseRatings):
+                seen = SeenIndex(seen)
+            exclude = [seen[int(u)] for u in user_ids]
+            fetch_hint = topk + seen.max_degree
+        return self.recommend_rows(rows, topk, exclude=exclude,
+                                   fetch_hint=fetch_hint)
+
+    def recommend_factors(
+        self,
+        u_draws: jax.Array,
+        topk: int,
+        *,
+        exclude: list[np.ndarray] | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for fold-in users given their per-draw factors (S, B, K)."""
+        rows = self.ensemble.user_scoring_rows(u_draws)
+        return self.recommend_rows(rows, topk, exclude=exclude)

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+`hypothesis` is a test extra (see pyproject.toml), not a hard dependency.
+A bare module-level import used to abort collection of three whole test
+modules when it was missing; a module-level `pytest.importorskip` would fix
+collection but throw away every *non*-property test in those modules too.
+This shim keeps both: with hypothesis installed the real `given / settings /
+strategies` are re-exported; without it the stand-ins below turn each
+`@given`-decorated test into an individually skipped test while the rest of
+the module runs normally.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (pip install hypothesis)"
+            )(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.* lookups resolve at decoration time; any call returns None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

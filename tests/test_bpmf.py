@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ALS, GibbsSampler, default_prior, plan_buckets
 from repro.core.buckets import workload_model
@@ -80,6 +80,30 @@ def test_bucket_plan_preserves_every_rating(n_items, n_counter, nnz, seed):
     assert sorted(got) == [tuple(x) for x in want]
     assert plan.nnz == nnz
     assert 0 < plan.padding_efficiency <= 1.0
+
+
+def test_bucket_plan_empty_items_field():
+    """Regression: BucketPlan.empty_items is Optional with a None default —
+    constructing a plan without naming it must not trip dataclass machinery,
+    and a fully-rated matrix yields an empty (not None) array."""
+    from repro.core.buckets import BucketPlan
+
+    plan = BucketPlan(n_items=3, n_counterparts=2, buckets=(), nnz=0, padded=0)
+    assert plan.empty_items is None
+
+    # every item rated -> empty_items present but zero-length
+    rows = np.array([0, 1, 2, 0], np.int32)
+    cols = np.array([0, 1, 0, 1], np.int32)
+    vals = np.ones(4, np.float32)
+    indptr, idx, v = csr_from_coo(rows, cols, vals, 3)
+    full = plan_buckets(indptr, idx, v, 3, 2, widths=(4, 16))
+    assert full.empty_items is not None and full.empty_items.size == 0
+
+    # item 1 unrated -> reported as empty
+    rows = np.array([0, 2], np.int32)
+    indptr, idx, v = csr_from_coo(rows, cols[:2], vals[:2], 3)
+    gappy = plan_buckets(indptr, idx, v, 3, 2, widths=(4, 16))
+    assert gappy.empty_items.tolist() == [1]
 
 
 def test_workload_model_monotone():

@@ -1,6 +1,6 @@
 """Data pipeline: dataset generators + seekable token stream."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config, reduced
 from repro.data import chembl_like, movielens_like, synthetic_lowrank, train_test_split

@@ -1,0 +1,264 @@
+"""Posterior-predictive serving: ensemble scoring, Pallas top-N, fold-in,
+sample retention, and the request-batching frontend."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import SampleStore
+from repro.core import GibbsSampler
+from repro.data import synthetic_lowrank, train_test_split
+from repro.data.sparse import SparseRatings
+from repro.kernels import ops, ref
+from repro.serve import (
+    PosteriorEnsemble,
+    RecommendFrontend,
+    TopNRecommender,
+    fold_in,
+)
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    """Small trained model with retained samples: (sample_dir, train, test)."""
+    ratings, _, _ = synthetic_lowrank(150, 90, k_true=6, nnz=4000, noise=0.3, seed=1)
+    train, test = train_test_split(ratings, 0.1, seed=2)
+    root = tmp_path_factory.mktemp("samples")
+    store = SampleStore(root, keep=10)
+    sampler = GibbsSampler(train, test, k=8, alpha=1.0 / 0.09, burn_in=6,
+                           widths=(8, 32, 128))
+    sampler.run(16, seed=0, store=store)
+    return str(root), train, test
+
+
+@pytest.fixture(scope="module")
+def ensemble(trained):
+    root, _, _ = trained
+    return PosteriorEnsemble.load(root)
+
+
+# ---------------------------------------------------------------------------
+# sample retention through the checkpoint store
+# ---------------------------------------------------------------------------
+def test_retained_samples_cover_post_burnin_sweeps(trained, ensemble):
+    root, train, _ = trained
+    store = SampleStore(root)
+    steps = store.steps()
+    assert len(steps) == 10  # 16 sweeps - 6 burn-in, all within keep
+    assert all(s > 6 for s in steps)
+    assert ensemble.n_samples == 10
+    assert ensemble.u.shape == (10, train.shape[0], 8)
+    assert ensemble.v.shape == (10, train.shape[1], 8)
+    assert ensemble.alpha == pytest.approx(1.0 / 0.09, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ensemble posterior-mean scores vs a NumPy reference
+# ---------------------------------------------------------------------------
+def test_ensemble_scores_match_numpy_reference(ensemble):
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, ensemble.n_users, 32).astype(np.int32)
+    items = rng.integers(0, ensemble.n_items, 32).astype(np.int32)
+    mean, var = ensemble.score(jnp.asarray(users), jnp.asarray(items))
+
+    per_draw = np.stack([
+        np.einsum("bk,bk->b", np.asarray(s.u)[users], np.asarray(s.v)[items])
+        for s in ensemble.samples
+    ]) + ensemble.global_mean
+    np.testing.assert_allclose(np.asarray(mean), per_draw.mean(0), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(var),
+        per_draw.var(0, ddof=1) + 1.0 / ensemble.alpha,
+        atol=1e-5,
+    )
+
+
+def test_ensemble_scoring_matrices_identity(ensemble):
+    """U' V'^T must equal the posterior-mean score minus the global mean."""
+    u_flat, v_flat = ensemble.scoring_matrices()
+    got = np.asarray(u_flat[:5] @ v_flat[:7].T)
+    want = np.asarray(ensemble.u[:, :5] @ ensemble.v[:, :7].transpose(0, 2, 1))
+    np.testing.assert_allclose(got, want.mean(0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas streaming top-k vs jax.lax.top_k — bit-for-bit in interpret mode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n,k,topk", [
+    (8, 1000, 64, 10),
+    (16, 257, 16, 50),
+    (8, 128, 8, 128),    # topk == block_n, single tile
+    (8, 10, 4, 10),      # catalogue smaller than one tile
+    (24, 5000, 32, 200), # topk > 128 -> wider tile
+])
+def test_topn_kernel_bitwise_matches_lax_topk(b, n, k, topk):
+    rng = np.random.default_rng(b * 100 + n + k)
+    u = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    if n > 300:
+        v = v.at[n // 2].set(v[3])  # force a score tie across tiles
+    v1, i1 = ops.topn_scores(u, v, topk, interpret=True)
+    v2, i2 = ref.topn_scores_ref(u, v, topk)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_topn_kernel_unaligned_batch_selects_identically():
+    """A padded batch may flip last-bit score rounding (different XLA gemm
+    micro-kernel) but must select the same items in the same order."""
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=(5, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(333, 16)), jnp.float32)
+    v1, i1 = ops.topn_scores(u, v, 7)
+    v2, i2 = ref.topn_scores_ref(u, v, 7)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_recommender_sharded_merge_matches_single_shard(ensemble):
+    users = np.arange(16, dtype=np.int32)
+    one = TopNRecommender(ensemble, n_shards=1)
+    many = TopNRecommender(ensemble, n_shards=4)
+    v1, i1 = one.recommend(users, 12)
+    v2, i2 = many.recommend(users, 12)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6, atol=1e-6)
+
+
+def test_recommender_excludes_seen_items(trained, ensemble):
+    _, train, _ = trained
+    rec = TopNRecommender(ensemble)
+    users = np.arange(10, dtype=np.int32)
+    vals, idx = rec.recommend(users, 10, seen=train)
+    for r, u in enumerate(users):
+        seen = set(train.cols[train.rows == u].tolist())
+        got = [i for i in idx[r].tolist() if i >= 0]
+        assert not seen.intersection(got)
+        assert len(got) == len(set(got))
+
+
+# ---------------------------------------------------------------------------
+# cold-start fold-in
+# ---------------------------------------------------------------------------
+def test_foldin_clone_matches_trained_user(trained, ensemble):
+    """Folding in a clone of a trained user from their ratings alone must
+    recover that user's factor posterior: per-draw fold-in *means* track the
+    trained draws, and posterior-mean predictions agree."""
+    _, train, _ = trained
+    degrees = np.bincount(train.rows, minlength=train.shape[0])
+    user = int(degrees.argmax())  # best-constrained user
+    m = train.rows == user
+    clone = SparseRatings(
+        rows=np.zeros(int(m.sum()), np.int32), cols=train.cols[m],
+        vals=train.vals[m], shape=(1, train.shape[1]),
+    )
+    u_draws = fold_in(jax.random.PRNGKey(0), clone, ensemble, sample=False)
+    assert u_draws.shape == (ensemble.n_samples, 1, ensemble.k)
+
+    fold_mean = np.asarray(u_draws[:, 0]).mean(0)
+    trained_mean = np.asarray(ensemble.u[:, user]).mean(0)
+    scale = np.abs(trained_mean).max()
+    np.testing.assert_allclose(fold_mean, trained_mean, atol=0.35 * scale)
+
+    # the serving-level check: predicted ratings agree tightly
+    items = jnp.asarray(train.cols[m][:20], jnp.int32)
+    mean_t, _ = ensemble.score(jnp.full((len(items),), user, jnp.int32), items)
+    mean_f, _ = ensemble.score_factors(
+        jnp.repeat(u_draws, len(items), axis=1), items
+    )
+    np.testing.assert_allclose(np.asarray(mean_f), np.asarray(mean_t), atol=0.25)
+
+
+def test_foldin_no_ratings_falls_back_to_prior(ensemble):
+    """A user with zero ratings gets the hyperprior posterior N(mu, lam^-1)."""
+    empty = SparseRatings(
+        rows=np.zeros(0, np.int32), cols=np.zeros(0, np.int32),
+        vals=np.zeros(0, np.float32), shape=(1, ensemble.n_items),
+    )
+    u_draws = fold_in(jax.random.PRNGKey(1), empty, ensemble, sample=False)
+    for s, smp in enumerate(ensemble.samples):
+        np.testing.assert_allclose(
+            np.asarray(u_draws[s, 0]), smp.hyper_u_mu, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# predictive variance shrinks with ensemble size
+# ---------------------------------------------------------------------------
+def test_posterior_mean_stderr_shrinks_with_samples(trained):
+    root, _, _ = trained
+    small = PosteriorEnsemble.load(root, max_samples=2)
+    large = PosteriorEnsemble.load(root, max_samples=10)
+    rng = np.random.default_rng(4)
+    users = jnp.asarray(rng.integers(0, small.n_users, 64), jnp.int32)
+    items = jnp.asarray(rng.integers(0, small.n_items, 64), jnp.int32)
+    se_small = float(jnp.mean(small.mean_stderr(users, items)))
+    se_large = float(jnp.mean(large.mean_stderr(users, items)))
+    assert se_large < se_small, (se_small, se_large)
+
+
+# ---------------------------------------------------------------------------
+# frontend: micro-batching + epoch-keyed cache
+# ---------------------------------------------------------------------------
+def test_frontend_batches_and_matches_direct_path(trained, ensemble):
+    root, train, _ = trained
+    fe = RecommendFrontend(root, seen=train, max_batch=4)
+    assert fe.epoch == ensemble.epoch
+
+    tickets = [fe.submit(u, topk=5) for u in range(6)]
+    m = train.rows == 0
+    cold_ticket = fe.submit_ratings(train.cols[m], train.vals[m], topk=5)
+    results = {r.ticket: r for r in fe.flush()}
+    assert fe.pending == 0
+    assert set(results) == set(tickets) | {cold_ticket}
+
+    rec = TopNRecommender(ensemble)
+    vals, idx = rec.recommend(np.arange(6, dtype=np.int32), 5, seen=train)
+    for r, t in enumerate(tickets):
+        np.testing.assert_array_equal(results[t].items, idx[r])
+    # the cold clone of user 0 must see none of user 0's rated items
+    assert not set(train.cols[m]).intersection(results[cold_ticket].items)
+    assert all(r.latency_s >= 0 for r in results.values())
+    assert fe.latency_percentiles()["p50"] >= 0
+
+
+def test_ensemble_load_survives_concurrent_prune(trained, tmp_path):
+    """A co-running trainer can prune a draw between a reader listing steps
+    and loading them (the store lock is per-process); the loader must skip
+    the vanished draw, not crash."""
+    import shutil
+
+    root, _, _ = trained
+    racy = tmp_path / "racy"
+    shutil.copytree(root, racy)
+    store = SampleStore(racy)
+    steps = store.steps()
+    # simulate the race: oldest step dir half-gone (manifest still listed)
+    victim = store.store.root / f"step_{steps[0]:010d}"
+    for leaf in victim.glob("leaf_*.npy"):
+        leaf.unlink()
+    ens = PosteriorEnsemble.load(racy)
+    assert ens.n_samples == len(steps) - 1
+
+
+def test_frontend_refresh_adopts_new_epoch(trained):
+    root, train, _ = trained
+    fe = RecommendFrontend(root, max_batch=4)
+    old_epoch = fe.epoch
+    assert fe.refresh() is False  # nothing new retained
+
+    store = SampleStore(root)
+    last = store.load(store.epoch())
+    store.retain(old_epoch + 1, {
+        "u": last.u, "v": last.v,
+        "hyper_u_mu": last.hyper_u_mu, "hyper_u_lam": last.hyper_u_lam,
+        "hyper_v_mu": last.hyper_v_mu, "hyper_v_lam": last.hyper_v_lam,
+        "global_mean": np.asarray(last.global_mean, np.float32),
+        "alpha": np.asarray(last.alpha, np.float32),
+    })
+    store.wait()  # retention is async by default; publish before polling
+    assert fe.refresh() is True
+    assert fe.epoch == old_epoch + 1
+    fe.submit(0, topk=3)
+    (res,) = fe.flush()
+    assert res.epoch == old_epoch + 1
