@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   rmse   accuracy parity across all samplers + ALS baseline (Sec 5.2 / 6)
   roofline  per-(arch x shape) dry-run roofline summary
   serve  BPMF top-N serving qps + latency vs request batch size
+  publish  publish-to-fresh-recommendation latency, push channel vs disk poll
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
-    from benchmarks import rmse_table, roofline, serve_topn
+    from benchmarks import publish_latency, rmse_table, roofline, serve_topn
 
     suites = [
         ("fig4", fig4_multicore.main),
@@ -25,6 +26,7 @@ def main() -> None:
         ("rmse", rmse_table.main),
         ("roofline", roofline.main),
         ("serve", serve_topn.main),
+        ("publish", publish_latency.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -22,7 +22,15 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row
+try:
+    from benchmarks.common import csv_row
+except ModuleNotFoundError:  # invoked as a file: python benchmarks/<name>.py
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import csv_row
+
 from repro.kernels import ops, ref
 
 BATCH_SIZES = (8, 32, 128)

@@ -1,6 +1,11 @@
 from repro.checkpoint.store import CheckpointStore
 from repro.checkpoint.elastic import restore_resharded
-from repro.checkpoint.samples import SAMPLE_KEYS, RetainedSample, SampleStore
+from repro.checkpoint.samples import (
+    SAMPLE_KEYS,
+    RetainedSample,
+    SampleStore,
+    as_retained_sample,
+)
 
 __all__ = [
     "CheckpointStore",
@@ -8,4 +13,5 @@ __all__ = [
     "SAMPLE_KEYS",
     "RetainedSample",
     "SampleStore",
+    "as_retained_sample",
 ]

@@ -5,8 +5,20 @@ BPMF's output is not one factor matrix but a set of post-burn-in Gibbs draws
 SampleStore maps each retained draw onto one CheckpointStore step, so sample
 retention inherits the store's atomicity and keep-last-N pruning: `keep`
 bounds the ensemble size, and a crash mid-save never corrupts an already
-retained draw. Readers (repro.serve) list and load draws without knowing the
-trainer's pytree structure — only the flat key schema below.
+retained draw.
+
+Readers (repro.serve) see retained draws on two paths sharing one contract —
+the flat key schema below, never the trainer's pytree structure:
+
+  * durable: list and load draws from a SampleStore directory (the original
+    pull path; survives trainer restarts, feeds cold server starts), or
+  * in-memory: receive the same draws as `RetainedSample`s pushed through a
+    `serve.publish.PublicationChannel` by a co-running trainer
+    (`as_retained_sample` validates the schema at the publish boundary).
+
+A draw published in memory and the same draw re-loaded from the store are
+interchangeable; serving code must not assume arrays are host-resident
+(publishes may carry device arrays).
 
 Schema per retained draw (flat dict of host arrays):
 
@@ -32,9 +44,12 @@ SAMPLE_KEYS = (
 )
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class RetainedSample:
-    """One post-burn-in Gibbs draw, host-resident."""
+    """One post-burn-in Gibbs draw. Arrays are host np.ndarrays when loaded
+    from a SampleStore, and may be device (jax) arrays when the draw arrived
+    through an in-memory PublicationChannel publish — consumers stack them
+    with jnp.asarray either way (PosteriorEnsemble)."""
 
     step: int
     u: np.ndarray
@@ -45,6 +60,27 @@ class RetainedSample:
     hyper_v_lam: np.ndarray
     global_mean: float
     alpha: float
+
+
+def as_retained_sample(step: int, sample: dict) -> RetainedSample:
+    """Validate a flat SAMPLE_KEYS dict into a RetainedSample — the shared
+    schema gate of both publication paths (SampleStore.retain writes the
+    same keys to disk; PublicationChannel.publish hands them to readers
+    directly)."""
+    missing = set(SAMPLE_KEYS) - set(sample)
+    if missing:
+        raise ValueError(f"sample missing keys: {sorted(missing)}")
+    return RetainedSample(
+        step=int(step),
+        u=sample["u"],
+        v=sample["v"],
+        hyper_u_mu=sample["hyper_u_mu"],
+        hyper_u_lam=sample["hyper_u_lam"],
+        hyper_v_mu=sample["hyper_v_mu"],
+        hyper_v_lam=sample["hyper_v_lam"],
+        global_mean=float(sample["global_mean"]),
+        alpha=float(sample["alpha"]),
+    )
 
 
 class SampleStore:

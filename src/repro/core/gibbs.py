@@ -302,21 +302,27 @@ class GibbsSampler:
         )
         return float(jnp.sqrt(jnp.mean((preds - self.test_vals) ** 2)))
 
+    def sample_dict(self, state: BPMFState, *, host: bool = True) -> dict:
+        """The current draw in the flat SAMPLE_KEYS schema both publication
+        paths consume. host=True copies arrays off-device (the durable
+        SampleStore write); host=False hands the device arrays through
+        as-is (the in-memory PublicationChannel publish — the subscriber
+        stacks them without a host round trip)."""
+        conv = np.asarray if host else (lambda x: x)
+        return {
+            "u": conv(state.u),
+            "v": conv(state.v),
+            "hyper_u_mu": conv(state.hyper_u.mu),
+            "hyper_u_lam": conv(state.hyper_u.lam),
+            "hyper_v_mu": conv(state.hyper_v.mu),
+            "hyper_v_lam": conv(state.hyper_v.lam),
+            "global_mean": np.asarray(self.global_mean, np.float32),
+            "alpha": np.asarray(self.alpha, np.float32),
+        }
+
     def retain_sample(self, state: BPMFState, store) -> None:
         """Persist the current draw into a checkpoint.SampleStore."""
-        store.retain(
-            int(state.step),
-            {
-                "u": np.asarray(state.u),
-                "v": np.asarray(state.v),
-                "hyper_u_mu": np.asarray(state.hyper_u.mu),
-                "hyper_u_lam": np.asarray(state.hyper_u.lam),
-                "hyper_v_mu": np.asarray(state.hyper_v.mu),
-                "hyper_v_lam": np.asarray(state.hyper_v.lam),
-                "global_mean": np.asarray(self.global_mean, np.float32),
-                "alpha": np.asarray(self.alpha, np.float32),
-            },
-        )
+        store.retain(int(state.step), self.sample_dict(state))
 
     def run(
         self,
@@ -325,18 +331,37 @@ class GibbsSampler:
         verbose: bool = False,
         *,
         store=None,
+        publish=None,
         thin: int = 1,
     ) -> BPMFState:
-        """Run the chain; with `store` (a checkpoint.SampleStore), retain every
-        `thin`-th post-burn-in draw — the train -> checkpoint -> serve handoff.
+        """Run the chain; every `thin`-th post-burn-in draw is handed off to
+        serving on up to two paths:
+
+        * `store` (a checkpoint.SampleStore): the durable write — survives
+          restarts, feeds cold server starts.
+        * `publish` (a serve.publish.PublicationChannel): the asynchronous
+          in-memory push to a co-running server — the draw is live before
+          (and regardless of whether) the store's async write hits disk.
+          The channel is left open; callers close() it when the co-running
+          server should see end-of-stream.
+
+        Both writes overlap the next sweep (the store's executor thread, the
+        channel's subscriber threads) — publication never stalls the chain,
+        which is the paper's async-communication discipline applied to the
+        train -> serve hand-off.
         """
         if thin < 1:
             raise ValueError(f"thin must be >= 1, got {thin}")
         state = self.init(seed)
         for i in range(n_sweeps):
             state = self.sweep(state)
-            if store is not None and i >= self.burn_in and (i - self.burn_in) % thin == 0:
-                self.retain_sample(state, store)
+            if i >= self.burn_in and (i - self.burn_in) % thin == 0:
+                if store is not None:
+                    self.retain_sample(state, store)
+                if publish is not None:
+                    publish.publish(
+                        int(state.step), self.sample_dict(state, host=False)
+                    )
             if verbose and (i % 5 == 0 or i == n_sweeps - 1):
                 print(f"sweep {i:3d}  sample-rmse {self.sample_rmse(state):.4f}")
         if store is not None:

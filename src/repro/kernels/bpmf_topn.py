@@ -55,6 +55,21 @@ def _topn_kernel(u_ref, v_ref, val_ref, idx_ref, *, topk: int, n_valid: int,
         idx_ref[...] = jnp.take_along_axis(cand_i, pos, axis=1)
 
 
+_trace_count = 0
+
+
+def trace_count() -> int:
+    """How many times the top-N kernel has been (re)traced this process.
+
+    The body of `topn_scores_pallas` bumps the counter at trace time only,
+    so the count moves exactly when the jit cache misses — a new
+    (shape, static-arg) combination. Serving publishes with unchanged
+    (S, N, K) must leave it flat (tests/test_publish.py asserts this);
+    compare before/after a swap to prove executable reuse.
+    """
+    return _trace_count
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("topk", "n_valid", "block_b", "block_n", "interpret"),
@@ -75,6 +90,8 @@ def topn_scores_pallas(
     are padding and never selected (ops.py pads). topk <= block_n so the
     first tile alone can seed the candidate list.
     """
+    global _trace_count
+    _trace_count += 1  # executes at trace time only: one bump per jit miss
     b, k = u.shape
     n = v.shape[0]
     assert b % block_b == 0 and n % block_n == 0, (b, n, block_b, block_n)

@@ -15,6 +15,20 @@ are micro-batched, scored by the Pallas streaming top-k kernel against the
 item-factor cache (keyed by sample epoch, sharded over the host mesh), and
 the run reports queries/sec plus p50/p99 latency. Without --samples it
 trains a small synthetic model first so the command works standalone.
+
+Co-train mode (train-while-serve, the paper's async overlap applied to the
+train -> serve hand-off):
+
+    PYTHONPATH=src python -m repro.launch.serve --bpmf --co-train \
+        --sweeps 24 --topk 10
+
+runs the GibbsSampler and the RecommendFrontend in one process, connected
+by a serve.publish.PublicationChannel: each retained post-burn-in draw is
+pushed to the live frontend (no disk poll), which swaps its ensemble
+atomically — reusing the compiled top-N kernel whenever (S, N, K) shapes
+are unchanged — while request traffic keeps flowing. Reports publish
+-> first-fresh-recommendation latency alongside the usual qps numbers.
+The same driver backs `python -m repro.launch.train --bpmf --co-serve`.
 """
 from __future__ import annotations
 
@@ -55,9 +69,133 @@ def train_demo_samples(root: str, *, seed: int = 0) -> "SparseRatings":
     return train
 
 
+def run_train_and_serve(
+    *,
+    scale: float = 0.01,
+    sweeps: int = 60,
+    k: int = 16,
+    burn_in: int = 6,
+    window: int = 4,
+    samples: str | None = None,
+    topk: int = 10,
+    max_batch: int = 8,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Train and serve in one process with overlapped sample publication.
+
+    A trainer thread runs the Gibbs chain, publishing every retained draw
+    into a PublicationChannel (and, when `samples` is given, also writing it
+    durably through the SampleStore — push and durable paths side by side).
+    The main thread serves continuous top-N traffic the whole time; the
+    frontend's subscriber thread adopts each publish as it lands. Returns a
+    metrics dict (also printed): requests served, draws published, ensemble
+    swaps, rebinds (swaps that reused the compiled top-N executables), and
+    publish -> first-fresh-recommendation latency percentiles.
+    """
+    import threading
+
+    from repro.checkpoint import SampleStore
+    from repro.core import GibbsSampler
+    from repro.data import movielens_like, train_test_split
+    from repro.serve import PublicationChannel, RecommendFrontend
+
+    if sweeps <= burn_in:
+        raise ValueError(
+            f"need sweeps > burn_in to publish anything ({sweeps} <= {burn_in})"
+        )
+    ratings, _, _ = movielens_like(scale=scale, seed=seed)
+    train, test = train_test_split(ratings, 0.1, seed=seed + 1)
+    sampler = GibbsSampler(train, test, k=k, alpha=4.0, burn_in=burn_in,
+                           widths=(8, 32, 128))
+    channel = PublicationChannel(window=window)
+    store = SampleStore(samples, keep=window) if samples else None
+    if verbose:
+        print(f"co-train: {train.shape[0]} x {train.shape[1]} ratings matrix, "
+              f"{sweeps} sweeps (burn-in {burn_in}), k={k}, window={window}"
+              + (f", durable store {samples}" if samples else ""))
+
+    trainer_error: list[BaseException] = []
+
+    def train_loop():
+        try:
+            sampler.run(sweeps, seed=seed, store=store, publish=channel)
+        except BaseException as e:  # noqa: BLE001 — surfaced after join
+            trainer_error.append(e)
+        finally:
+            channel.close()  # always unblocks the serving loop's drain
+
+    trainer = threading.Thread(target=train_loop, name="gibbs-trainer")
+    trainer.start()
+    try:
+        fe = RecommendFrontend(channel=channel, seen=train, max_batch=max_batch)
+    except Exception:
+        trainer.join()  # surface the root cause, not the closed channel
+        if trainer_error:
+            raise trainer_error[0]
+        raise
+
+    rng = np.random.default_rng(seed)
+    served = 0
+    fresh_lat: list[float] = []        # publish -> first fresh recommendation
+    seen_epochs: list[int] = []
+    t0 = time.perf_counter()
+    while True:
+        drained = channel.closed and fe.epoch >= (channel.epoch or 0)
+        for u in rng.integers(0, train.shape[0], max_batch):
+            fe.submit(int(u), topk=topk)
+        results = fe.flush()
+        served += len(results)
+        t_now = time.perf_counter()
+        for r in results:
+            if not seen_epochs or r.epoch > seen_epochs[-1]:
+                seen_epochs.append(r.epoch)
+                t_pub = channel.publish_time(r.epoch)
+                if t_pub is not None and len(seen_epochs) > 1:
+                    fresh_lat.append(t_now - t_pub)
+        if drained:
+            break
+    dt = time.perf_counter() - t0
+    trainer.join()
+    fe.close()
+    if trainer_error:
+        raise trainer_error[0]
+
+    lat = fe.latency_percentiles()
+    metrics = {
+        "served": served,
+        "qps": served / dt,
+        "published": channel.seq,
+        "epochs_served": len(seen_epochs),
+        "swaps": fe.swaps,
+        "rebinds": fe.rebinds,
+        "request_p50_ms": lat["p50"] * 1e3,
+        "request_p99_ms": lat["p99"] * 1e3,
+        "fresh_p50_ms": float(np.median(fresh_lat) * 1e3) if fresh_lat else float("nan"),
+        "fresh_max_ms": float(np.max(fresh_lat) * 1e3) if fresh_lat else float("nan"),
+    }
+    if verbose:
+        print(f"served {served} requests in {dt:.2f}s -> {metrics['qps']:,.0f} qps "
+              f"while {channel.seq} draws were published; served "
+              f"{len(seen_epochs)} distinct epochs "
+              f"({fe.swaps} swaps, {fe.rebinds} rebinds without recompile)")
+        print(f"request p50 {metrics['request_p50_ms']:.2f} ms  "
+              f"p99 {metrics['request_p99_ms']:.2f} ms;  publish->fresh "
+              f"p50 {metrics['fresh_p50_ms']:.1f} ms  "
+              f"max {metrics['fresh_max_ms']:.1f} ms")
+    return metrics
+
+
 def bpmf_main(args) -> None:
     from repro.launch.mesh import make_host_mesh
     from repro.serve import RecommendFrontend
+
+    if args.co_train:
+        run_train_and_serve(
+            sweeps=args.sweeps, samples=args.samples, topk=args.topk,
+            window=args.keep, max_batch=args.max_batch,
+        )
+        return
 
     seen = None
     root = args.samples
@@ -110,6 +248,13 @@ def main():
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--co-train", action="store_true",
+                    help="train and serve in one process; retained draws are "
+                         "pushed to the live frontend (no disk poll)")
+    ap.add_argument("--sweeps", type=int, default=60,
+                    help="co-train: total Gibbs sweeps")
+    ap.add_argument("--keep", type=int, default=4,
+                    help="co-train: publication window / ensemble size")
     args = ap.parse_args()
 
     if args.bpmf:

@@ -1,4 +1,23 @@
-"""Train-step construction: loss + grad + AdamW, with mesh-aware shardings."""
+"""Train-step construction: loss + grad + AdamW, with mesh-aware shardings.
+
+Also the BPMF training launcher. Plain training retains post-burn-in draws
+durably:
+
+    PYTHONPATH=src python -m repro.launch.train --bpmf --samples samples/ \
+        --sweeps 24 --k 16
+
+and --co-serve additionally runs a live RecommendFrontend in the same
+process, fed by the asynchronous sample-publication channel
+(serve/publish.py) — the trainer pushes each retained draw to serving
+while the next sweep runs, the overlap the paper makes between computation
+and communication (Sec 4), applied to the train -> serve hand-off:
+
+    PYTHONPATH=src python -m repro.launch.train --bpmf --co-serve --sweeps 24
+
+The co-serve path shares its driver with `repro.launch.serve --bpmf
+--co-train` (the two entry points are the trainer's and the server's view
+of the same overlapped process).
+"""
 from __future__ import annotations
 
 import functools
@@ -75,3 +94,68 @@ def shardings_of(pspecs: Any, mesh) -> Any:
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# BPMF training CLI (train -> retain; optionally train-while-serve)
+# ---------------------------------------------------------------------------
+def bpmf_train_main(args) -> None:
+    if args.co_serve:
+        from repro.launch.serve import run_train_and_serve
+
+        run_train_and_serve(
+            scale=args.scale, sweeps=args.sweeps, k=args.k,
+            burn_in=args.burn_in, window=args.keep, samples=args.samples,
+            seed=args.seed,
+        )
+        return
+
+    import tempfile
+
+    from repro.checkpoint import SampleStore
+    from repro.core import GibbsSampler
+    from repro.data import movielens_like, train_test_split
+
+    root = args.samples or tempfile.mkdtemp(prefix="bpmf_samples_")
+    ratings, _, _ = movielens_like(scale=args.scale, seed=args.seed)
+    train, test = train_test_split(ratings, 0.1, seed=args.seed + 1)
+    print(f"training {train.shape[0]} x {train.shape[1]} ({train.nnz} ratings), "
+          f"k={args.k}, {args.sweeps} sweeps (burn-in {args.burn_in}) -> {root}")
+    sampler = GibbsSampler(train, test, k=args.k, alpha=4.0,
+                           burn_in=args.burn_in, widths=(8, 32, 128))
+    store = SampleStore(root, keep=args.keep)
+    state = sampler.run(args.sweeps, seed=args.seed, store=store, verbose=True)
+    print(f"test rmse {sampler.rmse(state):.4f}; retained "
+          f"{len(store.steps())} draws; serve them with: "
+          f"python -m repro.launch.serve --bpmf --samples {root}")
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bpmf", action="store_true",
+                    help="train BPMF (the only CLI mode; LM training is a "
+                         "library — see make_train_step)")
+    ap.add_argument("--samples", default=None,
+                    help="SampleStore directory for retained draws "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--sweeps", type=int, default=40)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--burn-in", type=int, default=6)
+    ap.add_argument("--keep", type=int, default=4,
+                    help="retained-draw window (store keep / channel window)")
+    ap.add_argument("--scale", type=float, default=0.01,
+                    help="movielens_like dataset scale")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--co-serve", action="store_true",
+                    help="serve live recommendations from this process while "
+                         "training, via the async publication channel")
+    args = ap.parse_args()
+    if not args.bpmf:
+        raise SystemExit("only --bpmf has a CLI; LM training is library-only")
+    bpmf_train_main(args)
+
+
+if __name__ == "__main__":
+    main()

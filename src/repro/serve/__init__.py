@@ -10,16 +10,22 @@ SampleStore; this package turns them into a service:
                 by the Pallas streaming top-k kernel (kernels/bpmf_topn.py)
   foldin.py     cold-start fold-in — one-shot conditional posterior for a
                 user unseen at train time, from their ratings alone
+  publish.py    PublicationChannel — push-based, double-buffered trainer ->
+                server hand-off of retained draws; no disk poll in the loop
   frontend.py   RecommendFrontend — request micro-batching + an item-factor
-                cache keyed by sample epoch, sharded over launch/mesh.py
+                cache keyed by sample epoch, sharded over launch/mesh.py,
+                refreshed by channel subscription (push) or store poll
 """
 from repro.serve.ensemble import PosteriorEnsemble
 from repro.serve.foldin import fold_in
 from repro.serve.frontend import RecommendFrontend, RecommendResult
+from repro.serve.publish import ChannelSnapshot, PublicationChannel
 from repro.serve.topn import SeenIndex, TopNRecommender
 
 __all__ = [
+    "ChannelSnapshot",
     "PosteriorEnsemble",
+    "PublicationChannel",
     "fold_in",
     "RecommendFrontend",
     "RecommendResult",

@@ -59,6 +59,56 @@ class PosteriorEnsemble:
         store = SampleStore(root)
         return cls(store.load_all(max_samples))
 
+    @classmethod
+    def from_arrays(
+        cls,
+        u: jax.Array,
+        v: jax.Array,
+        *,
+        hyper_u_mu: jax.Array,
+        hyper_u_lam: jax.Array,
+        hyper_v_mu: jax.Array,
+        hyper_v_lam: jax.Array,
+        global_mean: float,
+        alpha: float,
+        steps: Sequence[int],
+    ) -> "PosteriorEnsemble":
+        """In-memory construction from already-stacked (device) arrays, for
+        embedders holding trainer state directly — no RetainedSample
+        bookkeeping, no disk. (The channel publish path is different: it
+        already has per-draw RetainedSamples and stacks them through the
+        regular constructor — see RecommendFrontend._adopt_snapshot.)
+
+        u: (S, M, K), v: (S, N, K); hypers are per-draw stacks
+        ((S, K) means, (S, K, K) precisions); steps: the S Gibbs step
+        numbers, ascending — the newest is the serving epoch.
+        """
+        u, v = jnp.asarray(u), jnp.asarray(v)
+        s = u.shape[0]
+        if len(steps) != s or v.shape[0] != s:
+            raise ValueError(f"expected {s} steps/draws, got {len(steps)}/{v.shape[0]}")
+        steps = [int(x) for x in steps]
+        if steps != sorted(steps):
+            raise ValueError(f"steps must be ascending (epoch = newest): {steps}")
+        hyper_u_mu, hyper_u_lam = jnp.asarray(hyper_u_mu), jnp.asarray(hyper_u_lam)
+        hyper_v_mu, hyper_v_lam = jnp.asarray(hyper_v_mu), jnp.asarray(hyper_v_lam)
+        return cls(tuple(
+            RetainedSample(
+                step=steps[i],
+                u=u[i], v=v[i],
+                hyper_u_mu=hyper_u_mu[i], hyper_u_lam=hyper_u_lam[i],
+                hyper_v_mu=hyper_v_mu[i], hyper_v_lam=hyper_v_lam[i],
+                global_mean=float(global_mean),
+                alpha=float(alpha),
+            )
+            for i in range(s)
+        ))
+
+    def shape_key(self) -> tuple[int, int, int, int]:
+        """(S, M, N, K) — equal keys mean every serving executable compiled
+        for this ensemble (top-N kernel, scoring jits) is reusable as-is."""
+        return (self.n_samples, self.n_users, self.n_items, self.k)
+
     @property
     def n_samples(self) -> int:
         return self.u.shape[0]

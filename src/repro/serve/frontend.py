@@ -8,13 +8,26 @@ Cold-start requests (raw ratings instead of a user id) ride the same queue:
 each flush folds them in against the current ensemble and scores them
 through the same top-N kernel as trained users.
 
-The item-factor cache is keyed by *sample epoch* — the newest retained step
-in the SampleStore. `refresh()` compares epochs and only then rebuilds the
-ensemble + re-shards V' across the mesh devices; between training publishes
-(or when no trainer is running) serving never touches the checkpoint
-directory again. The previous epoch's recommender is kept until the swap
-completes, so refresh is safe to call from a poller thread while requests
-are in flight.
+The item-factor cache is keyed by *sample epoch* — the newest retained
+Gibbs step — and is refreshed on one of two paths:
+
+* Push (preferred, trainer co-running): the frontend subscribes to a
+  `serve.publish.PublicationChannel`; each retained draw the trainer
+  publishes wakes the subscriber thread, which stacks the window into a
+  PosteriorEnsemble *in memory* and swaps it in without touching disk.
+  When the ensemble shapes (S, N, K) are unchanged — the steady state —
+  the swap rebinds the existing recommender's shard layout and reuses
+  every compiled top-N executable: a publish costs a buffer swap, not a
+  recompile.
+* Poll (fallback, no trainer attached): `refresh()` compares the
+  SampleStore's newest step against the cached epoch and only on change
+  reloads the ensemble from disk and re-shards V' across the mesh devices.
+
+Both paths swap atomically and double-buffered: the previous epoch's
+recommender is kept intact until the successor is fully built, and
+`flush()` captures (recommender, epoch) under the lock, so in-flight
+requests always score against one consistent ensemble — never a torn mix
+of old and new factors — whichever thread published.
 """
 from __future__ import annotations
 
@@ -31,6 +44,7 @@ from repro.checkpoint.samples import SampleStore
 from repro.data.sparse import SparseRatings
 from repro.serve.ensemble import PosteriorEnsemble
 from repro.serve.foldin import fold_in
+from repro.serve.publish import ChannelSnapshot, PublicationChannel
 from repro.serve.topn import SeenIndex, TopNRecommender
 
 
@@ -56,8 +70,11 @@ class _Pending:
 class RecommendFrontend:
     def __init__(
         self,
-        sample_root: str | Path,
+        sample_root: str | Path | None = None,
         *,
+        channel: PublicationChannel | None = None,
+        subscribe: bool = True,
+        wait_first_publish_s: float = 60.0,
         seen: SparseRatings | None = None,
         max_batch: int = 32,
         max_samples: int | None = None,
@@ -68,8 +85,18 @@ class RecommendFrontend:
         """seen: training ratings used to exclude already-rated items.
         devices / mesh: where to shard the item factors — a mesh contributes
         its "data"-axis devices (launch/mesh.py), default all local devices.
+
+        channel: a PublicationChannel a co-running trainer publishes into;
+        with subscribe=True (default) a daemon thread adopts each publish as
+        it lands, otherwise call refresh() to adopt on your own schedule.
+        At least one of sample_root / channel is required; with only a
+        channel the constructor blocks up to `wait_first_publish_s` for the
+        trainer's first retained draw.
         """
-        self.store = SampleStore(sample_root)
+        if sample_root is None and channel is None:
+            raise ValueError("need a sample_root, a channel, or both")
+        self.store = SampleStore(sample_root) if sample_root is not None else None
+        self.channel = channel
         self.seen = SeenIndex(seen) if seen is not None else None
         self.max_batch = max_batch
         self.max_samples = max_samples
@@ -78,13 +105,49 @@ class RecommendFrontend:
         self.devices = devices if devices is not None else jax.devices()
         self.interpret = interpret
         self._lock = threading.Lock()
+        self._adopt_lock = threading.Lock()  # one ensemble build at a time
         self._queue: list[_Pending] = []
         self._ticket = 0
         self._epoch: int | None = None
         self._recommender: TopNRecommender | None = None
         # bounded: a long-lived server must not grow one float per request
         self.latencies_s: collections.deque[float] = collections.deque(maxlen=65536)
-        self.refresh()
+        # publish-path stats: swap count and publish -> swap-visible latency
+        self.swaps = 0
+        self.rebinds = 0  # swaps that reused the compiled executables
+        self.publish_to_swap_s: collections.deque[float] = collections.deque(maxlen=4096)
+        self._subscriber: threading.Thread | None = None
+        self._stop = threading.Event()
+
+        # initial ensemble: disk when the store has retained draws (restart /
+        # no-trainer case); otherwise block for the trainer's first publish —
+        # a co-train first boot hands the server an still-empty sample dir
+        if self.store is not None and self.store.epoch() is not None:
+            self.refresh()
+        elif channel is not None:
+            snap = channel.wait(timeout=wait_first_publish_s)
+            if snap is None:
+                if channel.closed:
+                    # not a timeout: the trainer ended (or died) before
+                    # publishing anything — report that, don't mask it
+                    raise RuntimeError(
+                        "publication channel closed before the first publish "
+                        "(trainer failed or finished during burn-in?)"
+                    )
+                raise TimeoutError(
+                    f"no sample published within {wait_first_publish_s}s "
+                    "and no retained samples to fall back to"
+                )
+            self._adopt_snapshot(snap)
+        else:
+            raise FileNotFoundError(
+                f"no retained samples in {self.store.store.root}"
+            )
+        if channel is not None and subscribe:
+            self._subscriber = threading.Thread(
+                target=self._subscriber_loop, name="publish-subscriber", daemon=True
+            )
+            self._subscriber.start()
 
     # ------------------------------------------------------------------
     @property
@@ -97,11 +160,22 @@ class RecommendFrontend:
         return self._recommender.ensemble
 
     def refresh(self) -> bool:
-        """Adopt the newest sample epoch; True if the cache was rebuilt."""
+        """Adopt the newest published or retained epoch; True on a swap.
+
+        Checks the attached PublicationChannel first (in-memory adopt, no
+        disk); falls back to polling the SampleStore directory — the only
+        path when no trainer is co-running.
+        """
+        if self.channel is not None:
+            snap = self.channel.snapshot()
+            if snap is not None and (self._epoch is None or snap.epoch > self._epoch):
+                return self._adopt_snapshot(snap)
+        if self.store is None:
+            return False
         newest = self.store.epoch()
         if newest is None:
             raise FileNotFoundError(f"no retained samples in {self.store.store.root}")
-        if newest == self._epoch:
+        if self._epoch is not None and newest <= self._epoch:
             return False
         try:
             ensemble = PosteriorEnsemble.load(
@@ -113,13 +187,85 @@ class RecommendFrontend:
             if self._recommender is not None:
                 return False
             raise
-        recommender = TopNRecommender(
-            ensemble, devices=self.devices, interpret=self.interpret
-        )
-        with self._lock:
-            self._epoch = ensemble.epoch
-            self._recommender = recommender
+        return self._swap(ensemble, t_publish=None)
+
+    # ------------------------------------------------------------------
+    # publish-path adoption: in-memory ensemble build + atomic swap
+    # ------------------------------------------------------------------
+    def _adopt_snapshot(self, snap: ChannelSnapshot) -> bool:
+        """Build an ensemble from a channel snapshot and swap it in. The
+        epoch precheck is only an optimisation — _swap() re-checks under
+        its lock, which is what preserves monotonicity under races."""
+        if self._epoch is not None and snap.epoch <= self._epoch:
+            return False
+        draws = snap.draws
+        if self.max_samples is not None:
+            draws = draws[-self.max_samples:]
+        ensemble = PosteriorEnsemble(draws)
+        return self._swap(ensemble, t_publish=snap.t_publish)
+
+    def _swap(self, ensemble: PosteriorEnsemble, *, t_publish: float | None) -> bool:
+        """Atomically publish a fully-built successor recommender.
+
+        Double-buffered: the old recommender keeps serving until the new one
+        exists; rebind() reuses its compiled executables when shapes are
+        unchanged, else a full build (which retraces on first use).
+
+        Every adoption path (channel snapshot, disk reload) funnels through
+        here, and the monotonicity check runs under _adopt_lock — so a slow
+        disk refresh() racing the subscriber thread can never regress the
+        served epoch, and only one successor is built at a time.
+        """
+        with self._adopt_lock:
+            if self._epoch is not None and ensemble.epoch <= self._epoch:
+                return False  # lost the race to a newer adopt
+            old = self._recommender
+            rebound = False
+            if old is not None:
+                try:
+                    recommender = old.rebind(ensemble)
+                    rebound = True
+                except ValueError:
+                    recommender = TopNRecommender(
+                        ensemble, devices=self.devices, interpret=self.interpret
+                    )
+            else:
+                recommender = TopNRecommender(
+                    ensemble, devices=self.devices, interpret=self.interpret
+                )
+            with self._lock:
+                self._epoch = ensemble.epoch
+                self._recommender = recommender
+                self.swaps += 1
+                self.rebinds += int(rebound)
+                if t_publish is not None:
+                    self.publish_to_swap_s.append(time.perf_counter() - t_publish)
         return True
+
+    def _subscriber_loop(self) -> None:
+        """Daemon: sleep on the channel, adopt each newer snapshot on
+        arrival — the push path; serving threads never wait on a rebuild."""
+        while not self._stop.is_set():
+            snap = self.channel.wait(newer_than=self._epoch, timeout=0.25)
+            if snap is None:
+                if self.channel.closed:
+                    # a final publish can land between our timed-out wait()
+                    # and the closed check — drain it before exiting, or the
+                    # last epoch would never be adopted (co-train drain loops
+                    # block on fe.epoch catching up to channel.epoch)
+                    final = self.channel.snapshot()
+                    if final is not None:
+                        self._adopt_snapshot(final)
+                    return
+                continue  # timeout heartbeat: re-check _stop
+            self._adopt_snapshot(snap)
+
+    def close(self) -> None:
+        """Stop the subscriber thread (the channel itself stays usable)."""
+        self._stop.set()
+        if self._subscriber is not None:
+            self._subscriber.join(timeout=5.0)
+            self._subscriber = None
 
     # ------------------------------------------------------------------
     def submit(self, user_id: int, topk: int = 10) -> int:

@@ -15,6 +15,13 @@ ensemble's flattened scoring matrices. Two serving concerns live here:
   top-k, the same merge the kernel itself applies across item tiles. On a
   real slice each shard's kernel runs on its own device against its resident
   chunk — scoring scales with devices while the merge stays O(shards * topk).
+
+* Executable reuse across publishes. A co-running trainer replaces the
+  ensemble many times over a server's life, almost always at unchanged
+  (S, N, K). `rebind()` builds the successor recommender on the *same*
+  shard layout, so every kernel invocation lands on the jit cache entries
+  the predecessor already compiled — publishing costs a buffer swap, never
+  a retrace (`shape_key` is the identity that makes this safe).
 """
 from __future__ import annotations
 
@@ -65,19 +72,55 @@ class TopNRecommender:
     ):
         self.ensemble = ensemble
         self.interpret = interpret
+        self.devices = devices
         u_flat, v_flat = ensemble.scoring_matrices()
         self.u_flat = u_flat  # (M, S*K) trained-user scoring rows
         if devices is not None:
             n_shards = len(devices)
         self.n_shards = max(1, min(n_shards, v_flat.shape[0]))
         bounds = np.linspace(0, v_flat.shape[0], self.n_shards + 1).astype(int)
+        self.shard_bounds = bounds
         self.shard_offsets = bounds[:-1]
-        self.v_shards = []
+        self.v_shards = self._shard(v_flat)
+
+    def _shard(self, v_flat: jax.Array) -> list[jax.Array]:
+        """Split V' row-wise on the precomputed bounds, one chunk per device."""
+        shards = []
         for i in range(self.n_shards):
-            chunk = v_flat[bounds[i]: bounds[i + 1]]
-            if devices is not None:
-                chunk = jax.device_put(chunk, devices[i % len(devices)])
-            self.v_shards.append(chunk)
+            chunk = v_flat[self.shard_bounds[i]: self.shard_bounds[i + 1]]
+            if self.devices is not None:
+                chunk = jax.device_put(chunk, self.devices[i % len(self.devices)])
+            shards.append(chunk)
+        return shards
+
+    # ------------------------------------------------------------------
+    def rebind(self, ensemble: PosteriorEnsemble) -> "TopNRecommender":
+        """A new recommender serving `ensemble` through this one's compiled
+        executables: same shard bounds, same device placement, and — because
+        every jit in the scoring path keys on shapes this layout pins — zero
+        retraces of the top-N kernel (kernels.bpmf_topn.trace_count is flat
+        across a rebind; tested). The publish hot path: a same-shape sample
+        publication costs one V' re-shard + buffer swap, not a recompile.
+
+        Self is left untouched and fully servable — callers swap the
+        returned instance in atomically (RecommendFrontend holds requests'
+        view stable by capturing the old instance under its lock).
+
+        Raises ValueError when the ensemble's (S, M, N, K) changed; the
+        caller falls back to a full rebuild (which will retrace).
+        """
+        if ensemble.shape_key() != self.ensemble.shape_key():
+            raise ValueError(
+                f"shape changed: {ensemble.shape_key()} vs "
+                f"{self.ensemble.shape_key()} — rebuild, don't rebind"
+            )
+        # same config + same shapes -> identical shard bounds and device
+        # placement, so every kernel shape lands on the jit cache entries
+        # this instance already compiled
+        return self.__class__(
+            ensemble, n_shards=self.n_shards, devices=self.devices,
+            interpret=self.interpret,
+        )
 
     # ------------------------------------------------------------------
     def _topk_rows(self, rows: jax.Array, topk: int

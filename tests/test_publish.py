@@ -1,0 +1,342 @@
+"""Async sample publication: channel ordering, atomic frontend swaps, and
+compiled-executable reuse across same-shape publishes."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import SampleStore
+from repro.core import GibbsSampler
+from repro.data import synthetic_lowrank, train_test_split
+from repro.kernels import bpmf_topn
+from repro.serve import (
+    PosteriorEnsemble,
+    PublicationChannel,
+    RecommendFrontend,
+    TopNRecommender,
+)
+
+M, N, K = 24, 16, 4
+
+
+def make_sample(step: int, *, u=None, v=None) -> dict:
+    """A schema-complete draw; u/v default to deterministic per-step values."""
+    rng = np.random.default_rng(step)
+    return {
+        "u": (rng.normal(size=(M, K)).astype(np.float32) if u is None else u),
+        "v": (rng.normal(size=(N, K)).astype(np.float32) if v is None else v),
+        "hyper_u_mu": np.zeros(K, np.float32),
+        "hyper_u_lam": np.eye(K, dtype=np.float32),
+        "hyper_v_mu": np.zeros(K, np.float32),
+        "hyper_v_lam": np.eye(K, dtype=np.float32),
+        "global_mean": np.float32(0.0),
+        "alpha": np.float32(2.0),
+    }
+
+
+def epoch_coded_sample(step: int) -> dict:
+    """A draw whose top-1 score *is* its step: u rows are all-ones/K, v is
+    zero except item (step % N) which scores exactly `step`. Any mix of u
+    and v from different epochs (a torn swap) would score a wrong value."""
+    u = np.full((M, K), 1.0 / K, np.float32)
+    v = np.zeros((N, K), np.float32)
+    v[step % N] = float(step)
+    return make_sample(step, u=u, v=v)
+
+
+# ---------------------------------------------------------------------------
+# channel semantics
+# ---------------------------------------------------------------------------
+def test_channel_windows_and_orders_draws():
+    ch = PublicationChannel(window=3)
+    assert ch.snapshot() is None and ch.epoch is None and ch.seq == 0
+    for step in (10, 12, 11, 14):
+        assert ch.publish(step, make_sample(step))
+    snap = ch.snapshot()
+    assert snap.epoch == 14 and snap.seq == 4
+    assert [d.step for d in snap.draws] == [11, 12, 14]  # windowed, sorted
+
+
+def test_channel_epoch_monotone_under_out_of_order_publishes():
+    ch = PublicationChannel(window=4)
+    ch.publish(9, make_sample(9))
+    assert ch.epoch == 9
+    # a straggler draw lands in the window but cannot move the epoch back
+    assert ch.publish(7, make_sample(7)) is True
+    assert ch.epoch == 9
+    assert [d.step for d in ch.snapshot().draws] == [7, 9]
+    # duplicates and draws older than a full window are dropped
+    assert ch.publish(9, make_sample(9)) is False
+    ch.publish(10, make_sample(10))
+    ch.publish(11, make_sample(11))
+    assert ch.publish(3, make_sample(3)) is False
+    assert ch.epoch == 11 and ch.seq == 4
+
+
+def test_channel_wait_and_close():
+    ch = PublicationChannel(window=2)
+    assert ch.wait(timeout=0.01) is None
+    got = []
+    t = threading.Thread(target=lambda: got.append(ch.wait(timeout=5.0)))
+    t.start()
+    ch.publish(1, make_sample(1))
+    t.join(timeout=5.0)
+    assert got and got[0].epoch == 1
+    assert ch.wait(newer_than=1, timeout=0.01) is None  # nothing newer yet
+    ch.close()
+    assert ch.wait(newer_than=1, timeout=5.0) is None   # closed: no block
+    with pytest.raises(RuntimeError):
+        ch.publish(2, make_sample(2))
+
+
+def test_channel_push_callback_fires_per_publish():
+    ch = PublicationChannel(window=2)
+    seen = []
+    unsubscribe = ch.subscribe(lambda snap: seen.append(snap.epoch))
+    ch.publish(1, make_sample(1))
+    ch.publish(2, make_sample(2))
+    unsubscribe()
+    ch.publish(3, make_sample(3))
+    assert seen == [1, 2]
+
+
+def test_channel_rejects_incomplete_sample():
+    ch = PublicationChannel()
+    bad = make_sample(1)
+    del bad["alpha"]
+    with pytest.raises(ValueError, match="alpha"):
+        ch.publish(1, bad)
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: publish alongside the durable store
+# ---------------------------------------------------------------------------
+def test_gibbs_run_publishes_alongside_store(tmp_path):
+    ratings, _, _ = synthetic_lowrank(40, 24, k_true=3, nnz=600, noise=0.3, seed=0)
+    train, test = train_test_split(ratings, 0.1, seed=1)
+    store = SampleStore(tmp_path / "samples", keep=8)
+    ch = PublicationChannel(window=8)
+    sampler = GibbsSampler(train, test, k=4, alpha=2.0, burn_in=3, widths=(8, 32))
+    sampler.run(8, seed=0, store=store, publish=ch)
+
+    assert ch.epoch == store.epoch()
+    snap = ch.snapshot()
+    assert [d.step for d in snap.draws] == store.steps()
+    durable = store.load(store.epoch())
+    published = snap.draws[-1]
+    np.testing.assert_array_equal(np.asarray(published.u), durable.u)
+    np.testing.assert_array_equal(np.asarray(published.v), durable.v)
+    assert published.alpha == pytest.approx(durable.alpha)
+
+
+# ---------------------------------------------------------------------------
+# frontend adoption: epochs, monotonicity, no disk required
+# ---------------------------------------------------------------------------
+def test_frontend_serves_from_channel_without_disk():
+    ch = PublicationChannel(window=2)
+    ch.publish(5, epoch_coded_sample(5))
+    fe = RecommendFrontend(channel=ch, subscribe=False, max_batch=4)
+    assert fe.store is None and fe.epoch == 5
+    fe.submit(0, topk=1)
+    (res,) = fe.flush()
+    assert res.epoch == 5
+    assert res.items[0] == 5 % N and res.scores[0] == pytest.approx(5.0)
+
+
+def test_frontend_requires_some_sample_source():
+    with pytest.raises(ValueError, match="sample_root"):
+        RecommendFrontend()
+    ch = PublicationChannel()
+    with pytest.raises(TimeoutError):
+        RecommendFrontend(channel=ch, subscribe=False, wait_first_publish_s=0.05)
+    # a closed-before-first-publish channel means the trainer died/finished
+    # early — reported distinctly, not as a phantom timeout
+    ch.close()
+    with pytest.raises(RuntimeError, match="closed before the first publish"):
+        RecommendFrontend(channel=ch, subscribe=False, wait_first_publish_s=5.0)
+
+
+def test_frontend_epoch_monotone_and_stale_publish_ignored():
+    ch = PublicationChannel(window=4)
+    ch.publish(10, epoch_coded_sample(10))
+    fe = RecommendFrontend(channel=ch, subscribe=False, max_batch=4,
+                           max_samples=1)
+    assert fe.epoch == 10
+    # a straggler publish must not move the served epoch backwards
+    ch.publish(8, epoch_coded_sample(8))
+    assert fe.refresh() is False and fe.epoch == 10
+    ch.publish(12, epoch_coded_sample(12))
+    assert fe.refresh() is True and fe.epoch == 12
+    fe.submit(1, topk=1)
+    (res,) = fe.flush()
+    assert res.epoch == 12 and res.items[0] == 12 % N
+
+
+def test_frontend_prefers_channel_over_store(tmp_path):
+    root = tmp_path / "samples"
+    store = SampleStore(root, keep=4)
+    store.retain(1, epoch_coded_sample(1))
+    store.wait()
+    ch = PublicationChannel(window=1)
+    fe = RecommendFrontend(root, channel=ch, subscribe=False, max_batch=4)
+    assert fe.epoch == 1  # cold start from disk
+    ch.publish(6, epoch_coded_sample(6))
+    assert fe.refresh() is True and fe.epoch == 6  # push wins over the poll
+    fe.submit(2, topk=1)
+    (res,) = fe.flush()
+    assert res.items[0] == 6 % N and res.scores[0] == pytest.approx(6.0)
+
+
+def _draws(steps):
+    from repro.checkpoint import as_retained_sample
+
+    return tuple(as_retained_sample(s, epoch_coded_sample(s)) for s in steps)
+
+
+# ---------------------------------------------------------------------------
+# executable reuse: same-shape publish must not retrace the top-N kernel
+# ---------------------------------------------------------------------------
+def test_same_shape_publish_zero_topn_recompiles():
+    ch = PublicationChannel(window=2)
+    ch.publish(1, epoch_coded_sample(1))
+    ch.publish(2, epoch_coded_sample(2))  # window full: S pinned at 2
+    fe = RecommendFrontend(channel=ch, subscribe=False, max_batch=4)
+    fe.submit(0, topk=3)
+    fe.flush()  # compile at the serving shape
+
+    traces_before = bpmf_topn.trace_count()
+    for step in (3, 4, 5):
+        ch.publish(step, epoch_coded_sample(step))
+        assert fe.refresh() is True
+        fe.submit(0, topk=3)
+        (res,) = fe.flush()
+        assert res.epoch == step and res.items[0] == step % N
+    assert bpmf_topn.trace_count() == traces_before  # swaps, no retraces
+    assert fe.swaps >= 4 and fe.rebinds >= 3
+
+
+def test_rebind_rejects_shape_change_and_rebuild_still_works():
+    rec = TopNRecommender(PosteriorEnsemble(_draws((1, 2))))
+    e3 = PosteriorEnsemble(_draws((1, 2, 3)))  # S changed: 2 -> 3
+    with pytest.raises(ValueError, match="shape changed"):
+        rec.rebind(e3)
+    # the frontend path falls back to a full rebuild on shape change
+    ch = PublicationChannel(window=3)
+    for s in (1, 2):
+        ch.publish(s, epoch_coded_sample(s))
+    fe = RecommendFrontend(channel=ch, subscribe=False, max_batch=4)
+    ch.publish(3, epoch_coded_sample(3))  # window grows: S 2 -> 3
+    assert fe.refresh() is True
+    assert fe.swaps == 2 and fe.rebinds == 0
+    fe.submit(0, topk=1)
+    (res,) = fe.flush()
+    assert res.epoch == 3
+
+
+def test_ensemble_from_arrays_matches_draw_construction():
+    """from_arrays (stacked device arrays, the embedding API) must build the
+    same servable ensemble as stacking RetainedSamples."""
+    import jax.numpy as jnp
+
+    draws = _draws((3, 5))
+    want = PosteriorEnsemble(draws)
+    got = PosteriorEnsemble.from_arrays(
+        jnp.stack([jnp.asarray(d.u) for d in draws]),
+        jnp.stack([jnp.asarray(d.v) for d in draws]),
+        hyper_u_mu=jnp.stack([jnp.asarray(d.hyper_u_mu) for d in draws]),
+        hyper_u_lam=jnp.stack([jnp.asarray(d.hyper_u_lam) for d in draws]),
+        hyper_v_mu=jnp.stack([jnp.asarray(d.hyper_v_mu) for d in draws]),
+        hyper_v_lam=jnp.stack([jnp.asarray(d.hyper_v_lam) for d in draws]),
+        global_mean=want.global_mean, alpha=want.alpha, steps=(3, 5),
+    )
+    assert got.epoch == want.epoch == 5
+    assert got.shape_key() == want.shape_key()
+    users = np.asarray([0, 1], np.int32)
+    items = np.asarray([3 % N, 5 % N], np.int32)
+    np.testing.assert_allclose(
+        np.asarray(got.score(users, items)[0]),
+        np.asarray(want.score(users, items)[0]),
+    )
+    assert [s.step for s in got.samples] == [3, 5]  # fold_in metadata intact
+
+    with pytest.raises(ValueError, match="ascending"):
+        PosteriorEnsemble.from_arrays(
+            got.u, got.v,
+            hyper_u_mu=jnp.zeros((2, K)), hyper_u_lam=jnp.stack([jnp.eye(K)] * 2),
+            hyper_v_mu=jnp.zeros((2, K)), hyper_v_lam=jnp.stack([jnp.eye(K)] * 2),
+            global_mean=0.0, alpha=2.0, steps=(5, 3),
+        )
+
+
+def test_frontend_channel_with_empty_store_waits_for_first_publish(tmp_path):
+    """Co-train first boot: the durable sample dir exists but is still empty
+    (trainer in burn-in); a channel-attached frontend must block for the
+    first publish, not crash on the empty directory."""
+    ch = PublicationChannel(window=2)
+    t = threading.Thread(
+        target=lambda: (time.sleep(0.05), ch.publish(4, epoch_coded_sample(4)))
+    )
+    t.start()
+    fe = RecommendFrontend(tmp_path / "empty", channel=ch, subscribe=False,
+                           wait_first_publish_s=10.0)
+    t.join()
+    assert fe.epoch == 4
+    # store-only with an empty dir still fails fast, as before
+    with pytest.raises(FileNotFoundError):
+        RecommendFrontend(tmp_path / "empty2")
+
+
+def test_rebind_scores_new_factors_through_old_layout():
+    one = TopNRecommender(PosteriorEnsemble(_draws((4,))))
+    rebound = one.rebind(PosteriorEnsemble(_draws((7,))))
+    vals, idx = rebound.recommend(np.asarray([0], np.int32), 1)
+    assert idx[0][0] == 7 % N and vals[0][0] == pytest.approx(7.0)
+    # the original recommender still serves its own epoch untouched
+    vals, idx = one.recommend(np.asarray([0], np.int32), 1)
+    assert idx[0][0] == 4 % N and vals[0][0] == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# no torn ensemble: concurrent recommend() during a stream of publishes
+# ---------------------------------------------------------------------------
+def test_no_torn_ensemble_during_concurrent_publishes():
+    """Each epoch-coded draw scores exactly its own step for every user; a
+    torn swap (u from one epoch, v from another, or epoch label mismatching
+    the factors) would surface as a score != the result's reported epoch."""
+    ch = PublicationChannel(window=1)  # S pinned at 1: every swap rebinds
+    ch.publish(1, epoch_coded_sample(1))
+    fe = RecommendFrontend(channel=ch, subscribe=True, max_batch=4)
+
+    stop = threading.Event()
+
+    def publisher():
+        step = 2
+        while not stop.is_set() and step < 200:
+            ch.publish(step, epoch_coded_sample(step))
+            step += 1
+            time.sleep(0.002)
+        ch.close()
+
+    pub = threading.Thread(target=publisher)
+    pub.start()
+    served = []
+    try:
+        t_end = time.monotonic() + 3.0
+        while time.monotonic() < t_end and not ch.closed:
+            for u in range(3):
+                fe.submit(u, topk=1)
+            for res in fe.flush():
+                served.append(res)
+                # consistency: reported epoch, item, and score all agree
+                assert res.items[0] == res.epoch % N, res
+                assert res.scores[0] == pytest.approx(float(res.epoch)), res
+    finally:
+        stop.set()
+        pub.join(timeout=10.0)
+        fe.close()
+
+    epochs = [r.epoch for r in served]
+    assert len(served) >= 10
+    assert epochs == sorted(epochs)      # served freshness never regressed
+    assert len(set(epochs)) >= 2         # and at least one live swap happened
