@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   roofline  per-(arch x shape) dry-run roofline summary
   serve  BPMF top-N serving qps + latency vs request batch size
   publish  publish-to-fresh-recommendation latency, push channel vs disk poll
+  foldin  cold-start fold-in: fused (S*B) solve vs per-draw loop, plan cache
 """
 from __future__ import annotations
 
@@ -17,7 +18,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
-    from benchmarks import publish_latency, rmse_table, roofline, serve_topn
+    from benchmarks import foldin_latency, publish_latency, rmse_table
+    from benchmarks import roofline, serve_topn
 
     suites = [
         ("fig4", fig4_multicore.main),
@@ -27,6 +29,7 @@ def main() -> None:
         ("roofline", roofline.main),
         ("serve", serve_topn.main),
         ("publish", publish_latency.main),
+        ("foldin", foldin_latency.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -12,13 +12,17 @@ factorization cannot give you.
 import tempfile
 
 import numpy as np
-import jax
 
 from repro.checkpoint import SampleStore
 from repro.core import GibbsSampler
 from repro.data import movielens_like, train_test_split
 from repro.data.sparse import SparseRatings
-from repro.serve import PosteriorEnsemble, TopNRecommender, fold_in
+from repro.serve import (
+    FoldInPlanCache,
+    PosteriorEnsemble,
+    TopNRecommender,
+    fold_in,
+)
 
 TOPK = 10
 
@@ -51,18 +55,34 @@ def main():
         )
         print(f"user {u:4d} top-{TOPK}: {top}, ...")
 
-    # --- cold-start: a brand-new user, folded in from ratings alone ---
+    # --- cold-start: brand-new users, folded in from ratings alone. All S
+    # retained draws are solved in one fused (S*B) batched Cholesky solve,
+    # and the plan cache keys the bucket plan's quantized rating-count
+    # profile so repeated batches reuse every compiled executable. ---
     rng = np.random.default_rng(7)
+    cache = FoldInPlanCache()
     n_rated = 30
-    rated = rng.choice(train.shape[1], n_rated, replace=False).astype(np.int32)
-    u_new = rng.normal(0.0, 1.0 / np.sqrt(u_true.shape[1]), u_true.shape[1])
-    r_new = (v_true[rated] @ u_new + rng.normal(0, 0.3, n_rated)).astype(np.float32)
-    cold = SparseRatings(rows=np.zeros(n_rated, np.int32), cols=rated,
-                         vals=r_new, shape=(1, train.shape[1]))
-    u_draws = fold_in(jax.random.PRNGKey(3), cold, ens, sample=False)
+
+    def cold_user():
+        rated = rng.choice(train.shape[1], n_rated, replace=False).astype(np.int32)
+        u_new = rng.normal(0.0, 1.0 / np.sqrt(u_true.shape[1]), u_true.shape[1])
+        r_new = (v_true[rated] @ u_new + rng.normal(0, 0.3, n_rated)).astype(np.float32)
+        return rated, SparseRatings(rows=np.zeros(n_rated, np.int32), cols=rated,
+                                    vals=r_new, shape=(1, train.shape[1]))
+
+    rated, cold = cold_user()
+    # deterministic conditional posterior means (key=None); pass a PRNG key
+    # with sample=True for conditional draws instead
+    u_draws = fold_in(None, cold, ens, sample=False, plan_cache=cache)
     cvals, cidx = rec.recommend_factors(u_draws, TOPK, exclude=[rated])
     print(f"cold-start user ({n_rated} ratings) top-{TOPK}: "
           + ", ".join(f"{i}({v:.2f})" for i, v in zip(cidx[0], cvals[0])))
+
+    # a second same-profile batch is a plan-cache hit: no replanning, no
+    # recompile — the steady state of a cold-start request stream
+    rated, cold = cold_user()
+    fold_in(None, cold, ens, sample=False, plan_cache=cache)
+    print(f"fold-in plan cache after 2 same-profile batches: {cache.stats()}")
 
 
 if __name__ == "__main__":

@@ -152,6 +152,41 @@ def plan_buckets(
     )
 
 
+def pad_bucket(bucket: Bucket, rows: int, segments: int) -> Bucket:
+    """Pad a bucket to (rows, segments) — mask-zero rows and zero-sum
+    segments, so the padded plan computes identical statistics.
+
+    Pad rows carry mask 0 (their gathered factors are zeroed before the
+    syrk) and point at segment 0 / item 0, contributing exact zeros; pad
+    segments receive no rows and scatter zero sums into item 0. This is how
+    the fold-in plan cache maps every batch with a similar rating-count
+    profile onto one quantized set of array shapes, so the compiled
+    executables are reused across batches.
+    """
+    if rows < bucket.rows or segments < bucket.n_segments:
+        raise ValueError(
+            f"cannot pad bucket of ({bucket.rows} rows, {bucket.n_segments} "
+            f"segments) down to ({rows}, {segments})"
+        )
+    pr = rows - bucket.rows
+    ps = segments - bucket.n_segments
+    if pr == 0 and ps == 0:
+        return bucket
+    w = bucket.width
+    return Bucket(
+        width=w,
+        indices=np.concatenate([bucket.indices, np.zeros((pr, w), np.int32)]),
+        values=np.concatenate([bucket.values, np.zeros((pr, w), np.float32)]),
+        mask=np.concatenate([bucket.mask, np.zeros((pr, w), np.float32)]),
+        item_ids=np.concatenate([bucket.item_ids, np.zeros(pr, np.int32)]),
+        seg_ids=np.concatenate([bucket.seg_ids, np.zeros(pr, np.int32)]),
+        n_segments=segments,
+        seg_item_ids=np.concatenate(
+            [bucket.seg_item_ids, np.zeros(ps, np.int32)]
+        ),
+    )
+
+
 def workload_model(degrees: np.ndarray, fixed_cost: float = 1.0, per_rating: float = 0.02):
     """The paper's Sec 4.2 workload model: cost = fixed + c * n_ratings.
 

@@ -64,7 +64,13 @@ class DeviceBucket(NamedTuple):
     seg_item_ids: jax.Array
 
 
-def device_plan(plan: BucketPlan) -> tuple[DeviceBucket, ...]:
+def device_plan(
+    plan: BucketPlan | Sequence[Bucket],
+) -> tuple[DeviceBucket, ...]:
+    """Move a host plan (or a bare bucket sequence, e.g. one the fold-in
+    cache padded) onto the device."""
+    if isinstance(plan, BucketPlan):
+        plan = plan.buckets
     return tuple(
         DeviceBucket(
             width=b.width,
@@ -75,7 +81,7 @@ def device_plan(plan: BucketPlan) -> tuple[DeviceBucket, ...]:
             n_segments=b.n_segments,
             seg_item_ids=jnp.asarray(b.seg_item_ids),
         )
-        for b in plan.buckets
+        for b in plan
     )
 
 
@@ -84,40 +90,74 @@ def bucket_stats(
 ) -> tuple[jax.Array, jax.Array]:
     """Per-segment (sum v v^T, sum r v) for one bucket.
 
-    Returns (prec (S, K, K), rhs (S, K)) with S = bucket.n_segments.
+    counterpart is either one factor matrix (N, K) — the training sweep —
+    or a stack of S retained draws (S, N, K) — the serving fold-in, where
+    the same bucket plan (indices, ratings, mask are draw-independent) is
+    applied against every draw's factors in one batched contraction.
+    Returns (prec (..., n_segments, K, K), rhs (..., n_segments, K)) with
+    the leading draw axis present iff counterpart carried one.
     """
-    vg = counterpart[bucket.indices]                    # (rows, w, K)
+    if counterpart.ndim == 2:
+        vg = counterpart[bucket.indices]                # (rows, w, K)
+        vm = vg * bucket.mask[..., None]
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            prec_rows, rhs_rows = kops.masked_syrk(vm, bucket.values * bucket.mask)
+        else:
+            prec_rows = jnp.einsum(
+                "rwk,rwl->rkl", vm, vm, preferred_element_type=jnp.float32
+            )
+            rhs_rows = jnp.einsum("rwk,rw->rk", vm, bucket.values * bucket.mask)
+        prec = jax.ops.segment_sum(prec_rows, bucket.seg_ids, bucket.n_segments)
+        rhs = jax.ops.segment_sum(rhs_rows, bucket.seg_ids, bucket.n_segments)
+        return prec, rhs
+
+    # stacked draws: one gather + one contraction covering all S draws
+    vg = counterpart[:, bucket.indices]                 # (S, rows, w, K)
     vm = vg * bucket.mask[..., None]
+    rv = bucket.values * bucket.mask
     if use_kernel:
         from repro.kernels import ops as kops
 
-        prec_rows, rhs_rows = kops.masked_syrk(vm, bucket.values * bucket.mask)
+        prec_rows, rhs_rows = kops.masked_syrk(
+            vm, jnp.broadcast_to(rv, vm.shape[:-1])
+        )
     else:
         prec_rows = jnp.einsum(
-            "rwk,rwl->rkl", vm, vm, preferred_element_type=jnp.float32
+            "srwk,srwl->srkl", vm, vm, preferred_element_type=jnp.float32
         )
-        rhs_rows = jnp.einsum("rwk,rw->rk", vm, bucket.values * bucket.mask)
-    prec = jax.ops.segment_sum(prec_rows, bucket.seg_ids, bucket.n_segments)
-    rhs = jax.ops.segment_sum(rhs_rows, bucket.seg_ids, bucket.n_segments)
+        rhs_rows = jnp.einsum("srwk,rw->srk", vm, rv)
+    # segment_sum reduces the leading axis; rotate rows to the front and back
+    prec = jax.ops.segment_sum(
+        prec_rows.transpose(1, 0, 2, 3), bucket.seg_ids, bucket.n_segments
+    ).transpose(1, 0, 2, 3)
+    rhs = jax.ops.segment_sum(
+        rhs_rows.transpose(1, 0, 2), bucket.seg_ids, bucket.n_segments
+    ).transpose(1, 0, 2)
     return prec, rhs
 
 
 def sample_mvn_precision(
     key: jax.Array | None, prec: jax.Array, rhs: jax.Array,
-    *, use_kernel: bool = False
+    *, z: jax.Array | None = None, use_kernel: bool = False
 ) -> jax.Array:
-    """x ~ N(prec^-1 rhs, prec^-1), batched over the leading axis.
+    """x ~ N(prec^-1 rhs, prec^-1), batched over any leading axes.
 
     Cholesky-only (no inverse): with prec = L L^T,
       mean = L^-T (L^-1 rhs),  x = mean + L^-T z.
     key=None returns the posterior mean (the z = 0 limb of the same solve)
-    — the serving fold-in's deterministic mode.
+    — the serving fold-in's deterministic mode. An explicit `z` (same shape
+    as rhs) overrides the key: the batched fold-in pre-draws its noise with
+    the per-draw key sequence of the original per-sample loop, so fused and
+    looped sampling consume identical random bits.
     """
-    z = (
-        jnp.zeros_like(rhs)
-        if key is None
-        else jax.random.normal(key, rhs.shape, rhs.dtype)
-    )
+    if z is None:
+        z = (
+            jnp.zeros_like(rhs)
+            if key is None
+            else jax.random.normal(key, rhs.shape, rhs.dtype)
+        )
     if use_kernel:
         from repro.kernels import ops as kops
 

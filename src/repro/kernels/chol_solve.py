@@ -12,6 +12,11 @@ This kernel fuses, per VMEM-resident batch tile of K x K matrices:
 K is small (64 padded), so a whole (BB, K, K) tile lives in VMEM and the
 column loop is a lax.fori_loop of masked rank-1 updates — no HBM traffic
 between the three stages, which is the point of fusing them.
+
+The batch axis is one flat leading dimension; callers with stacked batches
+— the serving fold-in's (S draws, B users) solve — flatten them into a
+single (S*B) launch through the `kernels.ops.chol_solve_sample` wrapper,
+which also pads the batch to the tile size.
 """
 from __future__ import annotations
 

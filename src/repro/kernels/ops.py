@@ -30,8 +30,21 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 
 def masked_syrk(vm: jax.Array, rv: jax.Array, *, interpret: bool | None = None):
-    """(R, W, K) x (R, W) -> (prec (R,K,K), rhs (R,K)), padding W/R/K to tiles."""
+    """(..., R, W, K) x (..., R, W) -> (prec (...,R,K,K), rhs (...,R,K)).
+
+    Pads W/R/K to tiles. Extra leading axes (e.g. the fold-in's stacked-draw
+    axis S) are flattened into the row axis — every row is independent, so
+    the kernel sees one (S*R, W, K) launch instead of S separate ones.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    if vm.ndim > 3:
+        lead = vm.shape[:-2]
+        prec, rhs = masked_syrk(
+            vm.reshape((-1,) + vm.shape[-2:]), rv.reshape((-1, rv.shape[-1])),
+            interpret=interpret,
+        )
+        return (prec.reshape(lead + prec.shape[1:]),
+                rhs.reshape(lead + rhs.shape[1:]))
     r, w, k = vm.shape
     block_rows = 8
     block_w = min(128, max(8, w))
@@ -48,12 +61,26 @@ def chol_solve_sample(prec: jax.Array, rhs: jax.Array, z: jax.Array,
                       *, interpret: bool | None = None):
     """Batched x = Lambda^-1 rhs + L^-T z. Pads the batch to the tile size.
 
-    The K axis is NOT padded (a zero-padded precision matrix is singular);
-    callers keep K at an MXU-friendly size (BPMF uses K=64).
+    Any leading axes — (B,), or the fold-in's stacked (S, B) — are flattened
+    into one kernel batch: an (S, B, K, K) precision stack becomes a single
+    (S*B) launch, which is the fused serving solve. The K axis is NOT padded
+    (a zero-padded precision matrix is singular); callers keep K at an
+    MXU-friendly size (BPMF uses K=64).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    if prec.ndim > 3:
+        lead = prec.shape[:-2]
+        out = chol_solve_sample(
+            prec.reshape((-1,) + prec.shape[-2:]),
+            rhs.reshape((-1, rhs.shape[-1])),
+            z.reshape((-1, z.shape[-1])),
+            interpret=interpret,
+        )
+        return out.reshape(lead + out.shape[1:])
     bsz = prec.shape[0]
-    block_b = 16 if bsz % 16 == 0 else (8 if bsz % 8 == 0 else 1)
+    # always tile: an unaligned batch is padded with identity systems below
+    # rather than degrading to one-row tiles
+    block_b = 16 if bsz >= 16 else 8
     if bsz % block_b:
         pad = (-bsz) % block_b
         eye = jnp.broadcast_to(jnp.eye(prec.shape[-1], dtype=prec.dtype), (pad,) + prec.shape[1:])

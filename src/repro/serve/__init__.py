@@ -8,8 +8,10 @@ SampleStore; this package turns them into a service:
                 posterior-mean scores + predictive variance per (user, item)
   topn.py       TopNRecommender — batched top-N over the catalogue, backed
                 by the Pallas streaming top-k kernel (kernels/bpmf_topn.py)
-  foldin.py     cold-start fold-in — one-shot conditional posterior for a
-                user unseen at train time, from their ratings alone
+  foldin.py     cold-start fold-in — batched (S*B) conditional posteriors
+                for users unseen at train time, from their ratings alone;
+                FoldInPlanCache keeps the solve shapes (and compiled
+                executables) stable across request batches
   publish.py    PublicationChannel — push-based, double-buffered trainer ->
                 server hand-off of retained draws; no disk poll in the loop
   frontend.py   RecommendFrontend — request micro-batching + an item-factor
@@ -17,16 +19,18 @@ SampleStore; this package turns them into a service:
                 refreshed by channel subscription (push) or store poll
 """
 from repro.serve.ensemble import PosteriorEnsemble
-from repro.serve.foldin import fold_in
+from repro.serve.foldin import FoldInPlanCache, fold_in, fold_in_loop
 from repro.serve.frontend import RecommendFrontend, RecommendResult
 from repro.serve.publish import ChannelSnapshot, PublicationChannel
 from repro.serve.topn import SeenIndex, TopNRecommender
 
 __all__ = [
     "ChannelSnapshot",
+    "FoldInPlanCache",
     "PosteriorEnsemble",
     "PublicationChannel",
     "fold_in",
+    "fold_in_loop",
     "RecommendFrontend",
     "RecommendResult",
     "SeenIndex",

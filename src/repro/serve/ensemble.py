@@ -43,6 +43,15 @@ class PosteriorEnsemble:
         self.samples = tuple(samples)
         self.u = jnp.stack([jnp.asarray(s.u) for s in samples])  # (S, M, K)
         self.v = jnp.stack([jnp.asarray(s.v) for s in samples])  # (S, N, K)
+        # per-draw user hypers, stacked device-resident: the cold-start
+        # fold-in broadcasts one batch of rating statistics against all S
+        # of these in a single (S*B) solve (serve/foldin.py)
+        self.hyper_u_mu = jnp.stack(
+            [jnp.asarray(s.hyper_u_mu) for s in samples]     # (S, K)
+        )
+        self.hyper_u_lam = jnp.stack(
+            [jnp.asarray(s.hyper_u_lam) for s in samples]    # (S, K, K)
+        )
         self.global_mean = float(samples[-1].global_mean)
         self.alpha = float(samples[-1].alpha)
         self.epoch = int(samples[-1].step)

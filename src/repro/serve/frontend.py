@@ -43,7 +43,7 @@ import jax
 from repro.checkpoint.samples import SampleStore
 from repro.data.sparse import SparseRatings
 from repro.serve.ensemble import PosteriorEnsemble
-from repro.serve.foldin import fold_in
+from repro.serve.foldin import FoldInPlanCache, fold_in
 from repro.serve.publish import ChannelSnapshot, PublicationChannel
 from repro.serve.topn import SeenIndex, TopNRecommender
 
@@ -106,6 +106,10 @@ class RecommendFrontend:
         self.interpret = interpret
         self._lock = threading.Lock()
         self._adopt_lock = threading.Lock()  # one ensemble build at a time
+        # cold-start plan cache: batches with similar rating-count profiles
+        # share padded plan shapes, so the fused fold-in solve never
+        # recompiles on the steady-state cold path (serve/foldin.py)
+        self.foldin_cache = FoldInPlanCache()
         self._queue: list[_Pending] = []
         self._ticket = 0
         self._epoch: int | None = None
@@ -226,6 +230,11 @@ class RecommendFrontend:
                     recommender = old.rebind(ensemble)
                     rebound = True
                 except ValueError:
+                    # shape change: fold-in plan schemas key on the item
+                    # axis, so drop them with the executables they fed.
+                    # Same-shape rebinds keep every cache entry — a publish
+                    # must not cost the cold path its compiled solves.
+                    self.foldin_cache.clear()
                     recommender = TopNRecommender(
                         ensemble, devices=self.devices, interpret=self.interpret
                     )
@@ -270,13 +279,18 @@ class RecommendFrontend:
     # ------------------------------------------------------------------
     def submit(self, user_id: int, topk: int = 10) -> int:
         """Queue a trained-user request; returns a ticket matched by flush()."""
-        n_users = self.ensemble.n_users
-        if not 0 <= user_id < n_users:
-            # reject at enqueue (like submit_ratings): an out-of-range id
-            # would otherwise clamp to another user's recommendations, or
-            # crash the whole micro-batch in the seen-item lookup
-            raise ValueError(f"user id must be in [0, {n_users}), got {user_id}")
         with self._lock:
+            # snapshot the ensemble under the lock (the discipline flush()
+            # uses): an unlocked read could race a concurrent publish swap
+            # and validate against a torn view
+            n_users = self._recommender.ensemble.n_users
+            if not 0 <= user_id < n_users:
+                # reject at enqueue (like submit_ratings): an out-of-range id
+                # would otherwise clamp to another user's recommendations, or
+                # crash the whole micro-batch in the seen-item lookup
+                raise ValueError(
+                    f"user id must be in [0, {n_users}), got {user_id}"
+                )
             self._ticket += 1
             self._queue.append(_Pending(
                 ticket=self._ticket, topk=topk, t_enqueue=time.perf_counter(),
@@ -291,15 +305,20 @@ class RecommendFrontend:
         item_ids = np.asarray(item_ids, np.int32)
         ratings = np.asarray(ratings, np.float32)
         assert item_ids.shape == ratings.shape
-        n_items = self.ensemble.n_items
-        if item_ids.size and not (0 <= item_ids.min() and item_ids.max() < n_items):
-            # reject here, not at flush: one bad request must not poison the
-            # whole micro-batch it would be folded in with
-            raise ValueError(
-                f"item ids must be in [0, {n_items}), got "
-                f"[{item_ids.min()}, {item_ids.max()}]"
-            )
         with self._lock:
+            # same snapshot-under-lock discipline as submit(): the item-axis
+            # bound must come from the recommender a concurrent publish
+            # cannot be half-way through swapping
+            n_items = self._recommender.ensemble.n_items
+            if item_ids.size and not (
+                0 <= item_ids.min() and item_ids.max() < n_items
+            ):
+                # reject here, not at flush: one bad request must not poison
+                # the whole micro-batch it would be folded in with
+                raise ValueError(
+                    f"item ids must be in [0, {n_items}), got "
+                    f"[{item_ids.min()}, {item_ids.max()}]"
+                )
             self._ticket += 1
             self._queue.append(_Pending(
                 ticket=self._ticket, topk=topk, t_enqueue=time.perf_counter(),
@@ -352,10 +371,20 @@ class RecommendFrontend:
                 shape=(len(cold), rec.ensemble.n_items),
             )
             # deterministic fold-in (conditional posterior means): serving
-            # the same ratings twice must return the same recommendations
-            u_draws = fold_in(None, ratings, rec.ensemble, sample=False)
+            # the same ratings twice must return the same recommendations.
+            # The plan cache quantizes the batch's rating-count profile so
+            # the fused (S*B) solve recompiles only on new shape families.
+            u_draws = fold_in(None, ratings, rec.ensemble, sample=False,
+                              plan_cache=self.foldin_cache)
+            # explicit candidate-count pin (topk + batch max degree,
+            # power-of-two quantized) — the same fetch the exclusion lists
+            # imply, but stated independently of them, so the kernel shape
+            # stays pinned even for requests with nothing to exclude
+            hint = topk + max(len(p.item_ids) for p in cold)
+            hint = 1 << (hint - 1).bit_length()
             vals, idx = rec.recommend_factors(
-                u_draws, topk, exclude=[p.item_ids for p in cold]
+                u_draws, topk, exclude=[p.item_ids for p in cold],
+                fetch_hint=hint,
             )
             for r, p in enumerate(cold):
                 out[p.ticket] = (vals[r], idx[r])

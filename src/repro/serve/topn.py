@@ -159,8 +159,12 @@ class TopNRecommender:
         if exclude is not None:
             assert len(exclude) == b, (len(exclude), b)
             fetch = topk + max((len(e) for e in exclude), default=0)
-            if fetch_hint is not None:
-                fetch = max(fetch, fetch_hint)
+        if fetch_hint is not None:
+            # honored with or without exclusions: a hint pins the kernel
+            # shape even for exclusion-free (e.g. cold-start) batches, whose
+            # drifting topk would otherwise thrash the jit cache
+            fetch = max(fetch, fetch_hint)
+        if exclude is not None or fetch_hint is not None:
             # round up to a power of two: candidate count changes per batch,
             # quantizing it keeps the jit cache to O(log n_items) entries
             fetch = 1 << (fetch - 1).bit_length()
@@ -208,7 +212,13 @@ class TopNRecommender:
         topk: int,
         *,
         exclude: list[np.ndarray] | None = None,
+        fetch_hint: int | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Top-N for fold-in users given their per-draw factors (S, B, K)."""
+        """Top-N for fold-in users given their per-draw factors (S, B, K).
+
+        fetch_hint pins the candidate count across cold batches (the
+        frontend passes topk + batch max degree, power-of-two quantized) so
+        varying per-batch rated counts reuse one compiled kernel shape."""
         rows = self.ensemble.user_scoring_rows(u_draws)
-        return self.recommend_rows(rows, topk, exclude=exclude)
+        return self.recommend_rows(rows, topk, exclude=exclude,
+                                   fetch_hint=fetch_hint)

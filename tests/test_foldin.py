@@ -1,0 +1,295 @@
+"""Fused (S*B) cold-start fold-in: equivalence against the per-draw loop,
+plan-cache shape stability, and the serving-path fixes around it.
+
+Equivalence tolerance: the fused path computes bucket statistics and the
+Cholesky factor bit-identically to the loop (verified by construction and
+by the use_kernel case, which matches exactly); only the batched triangular
+solves may flip last-bit fp32 rounding because XLA picks a different
+micro-kernel per batch size. 1e-5 is far above that rounding and far below
+any real divergence.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.sparse import SparseRatings
+from repro.kernels import bpmf_topn
+from repro.serve import (
+    FoldInPlanCache,
+    PosteriorEnsemble,
+    PublicationChannel,
+    RecommendFrontend,
+    TopNRecommender,
+    fold_in,
+    fold_in_loop,
+)
+from repro.serve import foldin as foldin_mod
+
+S, M, N, K = 6, 50, 120, 8
+
+
+def _spd(k, rng):
+    a = rng.normal(size=(k, k)).astype(np.float32) / np.sqrt(k)
+    return a @ a.T + 2.0 * np.eye(k, dtype=np.float32)
+
+
+@pytest.fixture(scope="module")
+def ensemble():
+    rng = np.random.default_rng(0)
+    return PosteriorEnsemble.from_arrays(
+        rng.normal(size=(S, M, K)).astype(np.float32),
+        rng.normal(size=(S, N, K)).astype(np.float32),
+        hyper_u_mu=rng.normal(size=(S, K)).astype(np.float32) * 0.2,
+        hyper_u_lam=np.stack([_spd(K, rng) for _ in range(S)]),
+        hyper_v_mu=np.zeros((S, K), np.float32),
+        hyper_v_lam=np.stack([np.eye(K, dtype=np.float32)] * S),
+        global_mean=3.2,
+        alpha=2.0,
+        steps=list(range(S)),
+    )
+
+
+def _batch(degrees, n_items=N, seed=0):
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    for u, d in enumerate(degrees):
+        rows.extend([u] * int(d))
+        cols.extend(rng.choice(n_items, int(d), replace=False).tolist())
+        vals.extend(rng.normal(3.0, 1.0, int(d)).tolist())
+    return SparseRatings(
+        rows=np.asarray(rows, np.int32), cols=np.asarray(cols, np.int32),
+        vals=np.asarray(vals, np.float32), shape=(len(degrees), n_items),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused solve == per-draw loop
+# ---------------------------------------------------------------------------
+def test_fused_matches_loop_posterior_mean(ensemble):
+    ratings = _batch([3, 17, 40, 9, 1], seed=1)
+    fused = np.asarray(fold_in(None, ratings, ensemble, sample=False))
+    loop = np.asarray(fold_in_loop(None, ratings, ensemble, sample=False))
+    assert fused.shape == (S, 5, K)
+    np.testing.assert_allclose(fused, loop, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_matches_loop_sampling_same_key(ensemble):
+    """The fused path pre-draws noise with the loop's per-draw key-split
+    sequence, so the same key yields the same conditional draws."""
+    ratings = _batch([5, 24, 11], seed=2)
+    key = jax.random.PRNGKey(7)
+    fused = np.asarray(fold_in(key, ratings, ensemble, sample=True))
+    loop = np.asarray(fold_in_loop(key, ratings, ensemble, sample=True))
+    np.testing.assert_allclose(fused, loop, rtol=1e-5, atol=1e-5)
+    # and it is a genuine draw, not the mean
+    mean = np.asarray(fold_in(None, ratings, ensemble, sample=False))
+    assert np.abs(fused - mean).max() > 1e-3
+
+
+@pytest.mark.parametrize("sample", [False, True])
+def test_fused_matches_loop_kernel_path(ensemble, sample):
+    ratings = _batch([4, 30, 12], seed=3)
+    key = jax.random.PRNGKey(11) if sample else None
+    fused = np.asarray(
+        fold_in(key, ratings, ensemble, sample=sample, use_kernel=True)
+    )
+    loop = np.asarray(
+        fold_in_loop(key, ratings, ensemble, sample=sample, use_kernel=True)
+    )
+    np.testing.assert_allclose(fused, loop, rtol=1e-5, atol=1e-5)
+
+
+def test_plan_cache_padding_is_exact(ensemble):
+    """Quantized pad rows/segments/batch contribute exact zeros: the cached
+    path returns the same posteriors as the exact-shape path."""
+    ratings = _batch([3, 17, 40, 9, 1], seed=4)
+    exact = np.asarray(fold_in(None, ratings, ensemble, sample=False))
+    cached = np.asarray(fold_in(
+        None, ratings, ensemble, sample=False, plan_cache=FoldInPlanCache()
+    ))
+    np.testing.assert_allclose(cached, exact, rtol=1e-5, atol=1e-5)
+    # sampling mode: batch padding must not perturb the real users' noise
+    key = jax.random.PRNGKey(13)
+    exact_s = np.asarray(fold_in(key, ratings, ensemble))
+    cached_s = np.asarray(fold_in(
+        key, ratings, ensemble, plan_cache=FoldInPlanCache()
+    ))
+    np.testing.assert_allclose(cached_s, exact_s, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# argument validation and the zero-rating path
+# ---------------------------------------------------------------------------
+def test_sampling_requires_key(ensemble):
+    ratings = _batch([4], seed=5)
+    with pytest.raises(ValueError, match="needs a PRNG key"):
+        fold_in(None, ratings, ensemble, sample=True)
+    with pytest.raises(ValueError, match="needs a PRNG key"):
+        fold_in_loop(None, ratings, ensemble, sample=True)
+
+
+def test_empty_batch_serves_prior_mean(ensemble):
+    """Zero ratings -> the user hyper-prior posterior N(mu, lam^-1), without
+    ever touching the bucket planner."""
+    empty = SparseRatings(
+        rows=np.zeros(0, np.int32), cols=np.zeros(0, np.int32),
+        vals=np.zeros(0, np.float32), shape=(3, N),
+    )
+    mean = np.asarray(fold_in(None, empty, ensemble, sample=False))
+    assert mean.shape == (S, 3, K)
+    for s in range(S):
+        want = np.broadcast_to(np.asarray(ensemble.hyper_u_mu[s]), (3, K))
+        np.testing.assert_allclose(mean[s], want, rtol=1e-4, atol=1e-4)
+    # sampling from the prior works too (and differs from the mean)
+    draw = np.asarray(fold_in(jax.random.PRNGKey(0), empty, ensemble))
+    assert draw.shape == (S, 3, K)
+    assert np.abs(draw - mean).max() > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# plan cache: quantization, hits, trace flatness
+# ---------------------------------------------------------------------------
+def test_plan_cache_same_profile_hits_zero_traces(ensemble):
+    cache = FoldInPlanCache()
+    degrees = [6, 28, 45, 10]
+    fold_in(None, _batch(degrees, seed=10), ensemble, sample=False,
+            plan_cache=cache)
+    assert cache.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    traces = foldin_mod.trace_count()
+    for i in range(4):  # fresh items and values, same rating-count profile
+        fold_in(None, _batch(degrees, seed=20 + i), ensemble, sample=False,
+                plan_cache=cache)
+    assert foldin_mod.trace_count() == traces  # plan-cache hits, no retrace
+    assert cache.stats() == {"hits": 4, "misses": 1, "entries": 1}
+
+
+def test_plan_cache_quantizes_similar_profiles(ensemble):
+    """Degree profiles that differ within one power-of-two band share a
+    schema — the point of quantizing the rating-count profile."""
+    cache = FoldInPlanCache()
+    fold_in(None, _batch([5, 20, 40], seed=30), ensemble, sample=False,
+            plan_cache=cache)
+    traces = foldin_mod.trace_count()
+    # different counts, same (width, rows<=8, segments<=8) quantized shape
+    fold_in(None, _batch([7, 25, 44, 35], seed=31), ensemble, sample=False,
+            plan_cache=cache)
+    assert cache.hits == 1 and foldin_mod.trace_count() == traces
+    # a genuinely new shape family (only heavy users -> the small-width
+    # buckets disappear from the profile) misses
+    fold_in(None, _batch([100, 110], seed=32), ensemble, sample=False,
+            plan_cache=cache)
+    assert cache.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# frontend: cold path wiring
+# ---------------------------------------------------------------------------
+def _sample_dict(step, rng, m=M, n=N, k=K):
+    return {
+        "u": rng.normal(size=(m, k)).astype(np.float32),
+        "v": rng.normal(size=(n, k)).astype(np.float32),
+        "hyper_u_mu": rng.normal(size=k).astype(np.float32) * 0.2,
+        "hyper_u_lam": _spd(k, rng),
+        "hyper_v_mu": np.zeros(k, np.float32),
+        "hyper_v_lam": np.eye(k, dtype=np.float32),
+        "global_mean": np.float32(3.2),
+        "alpha": np.float32(2.0),
+    }
+
+
+def _frontend(window=4, prefill=4, max_batch=8):
+    rng = np.random.default_rng(42)
+    channel = PublicationChannel(window=window)
+    for s in range(prefill):
+        channel.publish(s, _sample_dict(s, rng))
+    fe = RecommendFrontend(channel=channel, subscribe=False,
+                           max_batch=max_batch)
+    return fe, channel, rng
+
+
+def test_frontend_empty_ratings_round_trip():
+    """submit_ratings([], []) must serve the user-prior posterior mean."""
+    fe, _, _ = _frontend()
+    ticket = fe.submit_ratings([], [], topk=5)
+    (res,) = fe.flush()
+    assert res.ticket == ticket
+    assert res.items.shape == (5,)
+    assert np.all(res.items >= 0) and len(set(res.items.tolist())) == 5
+    assert np.all(np.isfinite(res.scores))
+    # the prior-mean user's scores: mean over draws of mu_u^s . v_j^s + mean
+    ens = fe.ensemble
+    mu = np.asarray(ens.hyper_u_mu)            # (S, K)
+    lam = np.asarray(ens.hyper_u_lam)
+    prior = np.stack([np.linalg.solve(lam[s], lam[s] @ mu[s]) for s in range(ens.n_samples)])
+    want = np.mean(
+        np.einsum("sk,snk->sn", prior, np.asarray(ens.v)), axis=0
+    ) + ens.global_mean
+    np.testing.assert_allclose(res.scores, np.sort(want)[::-1][:5],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_frontend_cold_batches_trace_flat():
+    """Varied cold batches (drifting degrees and batch sizes within one
+    quantized family) must not retrace the fold-in solve or the top-N
+    kernel once the shape families are warm."""
+    fe, _, rng = _frontend()
+    profiles = [[31, 34, 45], [30, 31, 32, 33, 40, 50], [44, 46]]
+
+    def serve(profiles, seed):
+        for i, degs in enumerate(profiles):
+            b = _batch(degs, seed=seed + i)
+            for u in range(len(degs)):
+                m = b.rows == u
+                fe.submit_ratings(b.cols[m], b.vals[m], topk=5)
+            res = fe.flush()
+            assert len(res) == len(degs)
+
+    serve(profiles, seed=50)   # warm every shape family
+    topn_traces = bpmf_topn.trace_count()
+    foldin_traces = foldin_mod.trace_count()
+    hits0 = fe.foldin_cache.hits
+    serve(profiles, seed=60)   # same families, fresh data
+    assert bpmf_topn.trace_count() == topn_traces
+    assert foldin_mod.trace_count() == foldin_traces
+    assert fe.foldin_cache.hits > hits0
+
+
+def test_frontend_publish_keeps_cache_on_rebind_clears_on_shape_change():
+    fe, channel, rng = _frontend(window=4, prefill=3)  # S=3 to start
+    fe.submit_ratings([1, 2, 3], [4.0, 3.0, 5.0], topk=3)
+    fe.flush()
+    assert fe.foldin_cache.stats()["entries"] == 1
+    # 4th publish grows the window: S changes -> rebuild -> cache cleared
+    channel.publish(3, _sample_dict(3, rng))
+    assert fe.refresh() is True
+    assert fe.foldin_cache.stats()["entries"] == 0
+    fe.submit_ratings([1, 2, 3], [4.0, 3.0, 5.0], topk=3)
+    fe.flush()
+    assert fe.foldin_cache.stats()["entries"] == 1
+    # same-shape publish: rebind, cache kept
+    rebinds = fe.rebinds
+    channel.publish(4, _sample_dict(4, rng))
+    assert fe.refresh() is True
+    assert fe.rebinds == rebinds + 1
+    assert fe.foldin_cache.stats()["entries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fetch_hint without exclusions
+# ---------------------------------------------------------------------------
+def test_recommend_rows_fetch_hint_without_exclude(ensemble):
+    """A hint must pin the fetch width even when nothing is excluded, and
+    the returned topk must be unchanged by the wider fetch."""
+    rec = TopNRecommender(ensemble)
+    rows = rec.u_flat[:4]
+    plain_v, plain_i = rec.recommend_rows(rows, 5)
+    hint_v, hint_i = rec.recommend_rows(rows, 5, fetch_hint=64)
+    np.testing.assert_array_equal(plain_i, hint_i)
+    np.testing.assert_allclose(plain_v, hint_v, rtol=1e-6, atol=1e-6)
+    # the hinted fetch compiles one shape: repeating with other hints that
+    # quantize to the same power of two stays on the compiled kernel
+    traces = bpmf_topn.trace_count()
+    rec.recommend_rows(rows, 5, fetch_hint=50)   # 50 -> 64, same shape
+    rec.recommend_rows(rows, 5, fetch_hint=64)
+    assert bpmf_topn.trace_count() == traces
