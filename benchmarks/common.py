@@ -1,9 +1,13 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,3 +27,25 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def parse_csv_row(row: str) -> dict:
+    """One printed benchmark row back into its (name, us_per_call, derived)
+    record — the schema of the BENCH_<suite>.json artifacts."""
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def write_bench_json(suite: str, rows: list[str], extra: dict | None = None,
+                     out_dir: Path | str | None = None) -> Path:
+    """Persist a suite's rows as BENCH_<suite>.json next to the repo root,
+    so the perf trajectory is machine-readable across PRs (CI uploads the
+    artifact; benchmarks/roofline.py reads the sweep suite's measurements).
+    """
+    out_dir = Path(out_dir) if out_dir is not None else REPO_ROOT
+    payload = {"suite": suite, "rows": [parse_csv_row(r) for r in rows]}
+    if extra:
+        payload.update(extra)
+    path = out_dir / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(payload, indent=2))
+    return path

@@ -1,4 +1,6 @@
-"""Roofline report: reads artifacts/dryrun/*.json into the §Roofline table.
+"""Roofline report: reads artifacts/dryrun/*.json into the §Roofline table,
+plus the analytic HBM-traffic model of the BPMF sweep engines (predicted
+vs measured fused-engine reduction).
 
 For each (arch x shape x mesh) cell: the three terms (compute / memory /
 collective, seconds), the dominant bottleneck, MODEL_FLOPS / HLO_FLOPS
@@ -9,7 +11,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import csv_row
+from benchmarks.common import REPO_ROOT, csv_row
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
@@ -50,8 +52,78 @@ def markdown_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def main() -> list[str]:
+def sweep_traffic_model(plan, k: int, *, bf16_gather: bool = False) -> dict:
+    """Analytic HBM bytes of one half-sweep's statistics pass, per engine.
+
+    The counterpart-factor gather is the dominant roofline term: the
+    two-step path writes the gathered (rows, W, K) block to HBM and reads
+    it back (2x), then materializes the row-level (rows, K, K) precision
+    intermediate for a separate segment reduction (write + read). The fused
+    engine streams the gathered rows through VMEM exactly once (halved
+    again by a bf16 gather) and reduces segments in-kernel, so only the
+    per-segment outputs touch HBM.
+    """
+    f32 = 4
+    gdtype = 2 if bf16_gather else f32
+    lanes = sum(b.rows * b.width for b in plan.buckets)     # padded (row, w) slots
+    segs = sum(b.n_segments for b in plan.buckets)
+    gathered = lanes * k * f32
+    row_level = sum(b.rows for b in plan.buckets) * k * k * f32
+    seg_out = segs * (k * k + k) * f32
+    scatter = plan.n_items * (k * k + k) * f32              # per-item buffers
+    two_step = 2 * gathered + 2 * row_level + seg_out + 2 * scatter
+    fused = lanes * k * gdtype + seg_out + scatter
+    return {
+        "gathered_bytes": gathered,
+        "row_level_bytes": row_level,
+        "two_step_bytes": two_step,
+        "fused_bytes": fused,
+        "predicted_reduction": two_step / max(fused, 1),
+    }
+
+
+def sweep_rows() -> list[str]:
+    """Predicted fused-engine traffic reduction for the fig4 plan, next to
+    the measured speedup from the last BENCH_sweep.json run (CPU measures
+    wall time, so the two agree only in trend off-TPU)."""
+    from repro.core.buckets import plan_buckets
+    from repro.data import chembl_like, train_test_split
+    from repro.data.sparse import csr_from_coo
+
+    ratings, _, _ = chembl_like(scale=0.004, seed=0)
+    train, _ = train_test_split(ratings, 0.05, seed=1)
+    k = 32
+    c = train.centered()
+    m, n = train.shape
+    indptr, idx, vals = csr_from_coo(c.rows, c.cols, c.vals, m)
+    plan = plan_buckets(indptr, idx, vals, m, n, (8, 32, 128, 512))
     rows = []
+    for bf16 in (False, True):
+        t = sweep_traffic_model(plan, k, bf16_gather=bf16)
+        tag = "bf16" if bf16 else "f32"
+        rows.append(csv_row(
+            f"roofline_sweep_fused_{tag}", 0.0,
+            f"two_step_MB={t['two_step_bytes'] / 1e6:.2f};"
+            f"fused_MB={t['fused_bytes'] / 1e6:.2f};"
+            f"predicted_reduction={t['predicted_reduction']:.2f}x",
+        ))
+    bench = REPO_ROOT / "BENCH_sweep.json"
+    if bench.exists():
+        data = json.loads(bench.read_text())
+        sp = {r["name"]: r["derived"] for r in data.get("rows", [])
+              if r["name"].endswith("_speedup")}
+        for name, derived in sorted(sp.items()):
+            rows.append(csv_row(f"roofline_{name}_measured", 0.0, derived))
+    else:
+        rows.append(csv_row(
+            "roofline_sweep_measured", 0.0,
+            "run benchmarks/sweep_throughput.py for measured speedups",
+        ))
+    return rows
+
+
+def main() -> list[str]:
+    rows = sweep_rows()
     recs = load_records("single")
     if not recs:
         rows.append(csv_row("roofline_missing_artifacts", 0.0, "run launch/dryrun first"))

@@ -1,6 +1,8 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. Figures:
+Prints ``name,us_per_call,derived`` CSV rows and writes each suite's rows
+as a machine-readable ``BENCH_<suite>.json`` artifact (same records) so the
+perf trajectory is comparable across PRs. Figures:
   fig4   multicore updates/sec (engine comparison + load-balance stats)
   fig5   distributed strong scaling, ring (async) vs allgather (sync)
   fig6   comm/compute overlap structure from compiled HLO
@@ -9,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures:
   serve  BPMF top-N serving qps + latency vs request batch size
   publish  publish-to-fresh-recommendation latency, push channel vs disk poll
   foldin  cold-start fold-in: fused (S*B) solve vs per-draw loop, plan cache
+  sweep  training-sweep engines: reference vs restructured vs fused
 """
 from __future__ import annotations
 
@@ -19,27 +22,36 @@ import traceback
 def main() -> None:
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
     from benchmarks import foldin_latency, publish_latency, rmse_table
-    from benchmarks import roofline, serve_topn
+    from benchmarks import roofline, serve_topn, sweep_throughput
+    from benchmarks.common import write_bench_json
 
+    # sweep runs before roofline: roofline's measured-vs-predicted rows
+    # read the BENCH_sweep.json the sweep suite just wrote. Suites flagged
+    # self_publish write their own (richer) BENCH_<suite>.json — the
+    # driver must not overwrite it with a plain copy.
     suites = [
-        ("fig4", fig4_multicore.main),
-        ("fig5", fig5_distributed.main),
-        ("fig6", fig6_overlap.main),
-        ("rmse", rmse_table.main),
-        ("roofline", roofline.main),
-        ("serve", serve_topn.main),
-        ("publish", publish_latency.main),
-        ("foldin", foldin_latency.main),
+        ("fig4", fig4_multicore.main, False),
+        ("fig5", fig5_distributed.main, False),
+        ("fig6", fig6_overlap.main, False),
+        ("rmse", rmse_table.main, False),
+        ("sweep", sweep_throughput.main, True),
+        ("roofline", roofline.main, False),
+        ("serve", serve_topn.main, False),
+        ("publish", publish_latency.main, False),
+        ("foldin", foldin_latency.main, False),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
+    for name, fn, self_publish in suites:
         if only and name != only:
             continue
         try:
-            for row in fn():
+            rows = list(fn())
+            for row in rows:
                 print(row)
+            if not self_publish:
+                write_bench_json(name, rows)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}")

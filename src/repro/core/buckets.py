@@ -157,11 +157,13 @@ def pad_bucket(bucket: Bucket, rows: int, segments: int) -> Bucket:
     segments, so the padded plan computes identical statistics.
 
     Pad rows carry mask 0 (their gathered factors are zeroed before the
-    syrk) and point at segment 0 / item 0, contributing exact zeros; pad
-    segments receive no rows and scatter zero sums into item 0. This is how
-    the fold-in plan cache maps every batch with a similar rating-count
-    profile onto one quantized set of array shapes, so the compiled
-    executables are reused across batches.
+    syrk) and point at the LAST padded segment / item 0, contributing exact
+    zeros while keeping `seg_ids` nondecreasing — the invariant the fused
+    gather-syrk kernel's in-kernel segment reduction relies on. Pad
+    segments receive only zero contributions and scatter them into item 0.
+    This is how the fold-in plan cache maps every batch with a similar
+    rating-count profile onto one quantized set of array shapes, so the
+    compiled executables are reused across batches.
     """
     if rows < bucket.rows or segments < bucket.n_segments:
         raise ValueError(
@@ -179,7 +181,9 @@ def pad_bucket(bucket: Bucket, rows: int, segments: int) -> Bucket:
         values=np.concatenate([bucket.values, np.zeros((pr, w), np.float32)]),
         mask=np.concatenate([bucket.mask, np.zeros((pr, w), np.float32)]),
         item_ids=np.concatenate([bucket.item_ids, np.zeros(pr, np.int32)]),
-        seg_ids=np.concatenate([bucket.seg_ids, np.zeros(pr, np.int32)]),
+        seg_ids=np.concatenate(
+            [bucket.seg_ids, np.full(pr, segments - 1, np.int32)]
+        ),
         n_segments=segments,
         seg_item_ids=np.concatenate(
             [bucket.seg_item_ids, np.zeros(ps, np.int32)]

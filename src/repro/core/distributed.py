@@ -20,7 +20,6 @@ Sec 5.2 is testable exactly.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -28,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.gibbs import sample_mvn_precision
+from repro.core.gibbs import chol_subst_solve
 from repro.core.hyper import (
     HyperParams,
     NWPrior,
@@ -36,10 +35,26 @@ from repro.core.hyper import (
     init_hyper,
     sample_normal_wishart,
 )
-from repro.core.partition import EntityPartition, GridPlan, build_grid_plan, partition_entities
+from repro.core.partition import GridPlan, build_grid_plan, partition_entities
 from repro.data.sparse import SparseRatings
 
 AXIS = "items"
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map shim: older jax exposes it under jax.experimental with
+    the replication check named check_rep instead of check_vma."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
 
 
 class DistState(NamedTuple):
@@ -51,16 +66,51 @@ class DistState(NamedTuple):
     step: jax.Array
 
 
+# stats engines the distributed sweep supports: the einsum reference and
+# the fused gather-syrk kernel (core.gibbs.ENGINES documents the family)
+DIST_ENGINES = ("einsum", "fused")
+
+
 def _per_item_noise(key: jax.Array, item_ids: jax.Array, k: int) -> jax.Array:
-    """Noise keyed by global item id — layout-independent determinism."""
-    def one(i):
-        return jax.random.normal(jax.random.fold_in(key, i), (k,), jnp.float32)
+    """Noise keyed by global item id — layout-independent determinism.
 
-    return jax.vmap(one)(jnp.maximum(item_ids, 0))
+    The whole id vector is folded into per-item keys in one vmapped
+    threefry call, then the noise drawn in one vmapped normal
+    (`jax.random.fold_in` itself accepts only scalars); under jit the pair
+    fuses into a single launch. Bit-identical to folding each id
+    separately — pinned by a regression test, since the ring/allgather
+    parity argument depends on these exact bits.
+    """
+    ids = jnp.maximum(item_ids, 0)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+    return jax.vmap(lambda kk: jax.random.normal(kk, (k,), jnp.float32))(keys)
 
 
-def _accumulate_block(counter_blk, idx, val, msk, seg, n_loc):
-    """Partial (prec, rhs) of local items against one counterpart block."""
+def _accumulate_block(counter_blk, idx, val, msk, seg, seg_dense, seg_map,
+                      n_loc, *, engine="einsum"):
+    """Partial (prec, rhs) of local items against one counterpart block.
+
+    einsum: gathered block + row-level einsums + segment_sum (the
+    equivalence-tested reference). fused: `ops.gather_syrk_seg` — the
+    counterpart block is gathered in-kernel against the dense per-block
+    segment ids and the per-segment outputs scatter once through seg_map
+    (slot n_loc collects the padding and is dropped).
+    """
+    if engine == "fused":
+        from repro.kernels import ops as kops
+
+        r = idx.shape[0]
+        k = counter_blk.shape[-1]
+        prec_seg, rhs_seg = kops.gather_syrk_seg(
+            idx, val, msk, seg_dense, r, counter_blk
+        )
+        prec = jnp.zeros((n_loc + 1, k, k), jnp.float32).at[seg_map].add(
+            prec_seg
+        )[:n_loc]
+        rhs = jnp.zeros((n_loc + 1, k), jnp.float32).at[seg_map].add(
+            rhs_seg
+        )[:n_loc]
+        return prec, rhs
     vg = counter_blk[idx]                            # (R, W, K)
     vm = vg * msk[..., None]
     prec_rows = jnp.einsum("rwk,rwl->rkl", vm, vm, preferred_element_type=jnp.float32)
@@ -70,14 +120,15 @@ def _accumulate_block(counter_blk, idx, val, msk, seg, n_loc):
     return prec, rhs
 
 
-def _phase_ring(key, counter_blk, plans, item_ids, hyper, alpha, n_shards):
+def _phase_ring(key, counter_blk, plans, item_ids, hyper, alpha, n_shards,
+                engine):
     """One ring half-sweep: resample local items given sharded counterpart.
 
     plans: (P, R, W) arrays (this shard's slice of the grid plan) keyed by
     source block id. At ring step s, this device holds block
     (pid - s) mod P; the matching plan slice is selected dynamically.
     """
-    idx_all, val_all, msk_all, seg_all = plans
+    idx_all, val_all, msk_all, seg_all, segd_all, segm_all = plans
     n_loc = item_ids.shape[0]
     k = counter_blk.shape[-1]
     pid = jax.lax.axis_index(AXIS)
@@ -85,11 +136,11 @@ def _phase_ring(key, counter_blk, plans, item_ids, hyper, alpha, n_shards):
     def step(carry, s):
         blk, prec, rhs = carry
         src = jnp.mod(pid - s, n_shards)
-        idx = jnp.take(idx_all, src, axis=0)
-        val = jnp.take(val_all, src, axis=0)
-        msk = jnp.take(msk_all, src, axis=0)
-        seg = jnp.take(seg_all, src, axis=0)
-        dp, dr = _accumulate_block(blk, idx, val, msk, seg, n_loc)
+        take = lambda a: jnp.take(a, src, axis=0)
+        dp, dr = _accumulate_block(
+            blk, take(idx_all), take(val_all), take(msk_all), take(seg_all),
+            take(segd_all), take(segm_all), n_loc, engine=engine,
+        )
         # forward the block; independent of this step's accumulate -> overlap
         blk = jax.lax.ppermute(
             blk, AXIS, [(i, (i + 1) % n_shards) for i in range(n_shards)]
@@ -110,14 +161,17 @@ def _phase_ring(key, counter_blk, plans, item_ids, hyper, alpha, n_shards):
     return new
 
 
-def _phase_allgather(key, counter_blk, plan_full, item_ids, hyper, alpha):
+def _phase_allgather(key, counter_blk, plan_full, item_ids, hyper, alpha,
+                     engine):
     """Sync baseline: gather the whole counterpart, then sweep locally."""
     full = jax.lax.all_gather(counter_blk, AXIS)      # (P, n_loc, K)
     full = full.reshape(-1, full.shape[-1])
-    idx, val, msk, seg = plan_full
+    idx, val, msk, seg, seg_dense, seg_map = plan_full
     n_loc = item_ids.shape[0]
     k = counter_blk.shape[-1]
-    prec, rhs = _accumulate_block(full, idx, val, msk, seg, n_loc)
+    prec, rhs = _accumulate_block(
+        full, idx, val, msk, seg, seg_dense, seg_map, n_loc, engine=engine
+    )
     prec = hyper.lam[None] + alpha * prec
     rhs = (hyper.lam @ hyper.mu)[None] + alpha * rhs
     z = _per_item_noise(key, item_ids, k)
@@ -126,12 +180,9 @@ def _phase_allgather(key, counter_blk, plan_full, item_ids, hyper, alpha):
 
 
 def _chol_sample(prec, rhs, z):
-    chol = jnp.linalg.cholesky(prec)
-    y = jax.lax.linalg.triangular_solve(chol, rhs[..., None], left_side=True, lower=True)
-    x = jax.lax.linalg.triangular_solve(
-        chol, y + z[..., None], left_side=True, lower=True, transpose_a=True
-    )
-    return x[..., 0]
+    # batch-vectorized substitution (core.gibbs): XLA's batched triangular
+    # solve dispatches per batch element on CPU and dominated the sweep
+    return chol_subst_solve(jnp.linalg.cholesky(prec), rhs, z)
 
 
 def _stats(x, valid):
@@ -144,12 +195,17 @@ def _stats(x, valid):
     return sum_x, sum_xxt, n
 
 
-def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior):
+def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior,
+               engine: str = "einsum"):
     """shard_map'd full Gibbs sweep (both phases + fused hyper stats).
 
     Standalone so the production-mesh dry-run can lower it against
-    ShapeDtypeStruct plans without building a real plan.
+    ShapeDtypeStruct plans without building a real plan. `engine` picks the
+    per-block stats path (DIST_ENGINES); plans are 6-tuples
+    (idx, val, msk, seg, seg_dense, seg_map).
     """
+    if engine not in DIST_ENGINES:
+        raise ValueError(f"engine must be one of {DIST_ENGINES}, got {engine!r}")
     n_shards = mesh.shape[AXIS]
 
     def sweep(state: DistState, u_plans, v_plans, u_ids, v_ids):
@@ -164,16 +220,20 @@ def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior):
         sv = _stats(state.v[0], v_ids >= 0)
         hyper_v = sample_normal_wishart(k_hv, *sv, prior)
         if mode == "ring":
-            v_new = _phase_ring(k_v, state.u[0], v_plans, v_ids, hyper_v, alpha, n_shards)
+            v_new = _phase_ring(k_v, state.u[0], v_plans, v_ids, hyper_v,
+                                alpha, n_shards, engine)
         else:
-            v_new = _phase_allgather(k_v, state.u[0], v_plans, v_ids, hyper_v, alpha)
+            v_new = _phase_allgather(k_v, state.u[0], v_plans, v_ids, hyper_v,
+                                     alpha, engine)
 
         su = _stats(state.u[0], u_ids >= 0)
         hyper_u = sample_normal_wishart(k_hu, *su, prior)
         if mode == "ring":
-            u_new = _phase_ring(k_u, v_new, u_plans, u_ids, hyper_u, alpha, n_shards)
+            u_new = _phase_ring(k_u, v_new, u_plans, u_ids, hyper_u,
+                                alpha, n_shards, engine)
         else:
-            u_new = _phase_allgather(k_u, v_new, u_plans, u_ids, hyper_u, alpha)
+            u_new = _phase_allgather(k_u, v_new, u_plans, u_ids, hyper_u,
+                                     alpha, engine)
 
         return DistState(
             u=u_new[None], v=v_new[None], hyper_u=hyper_u, hyper_v=hyper_v,
@@ -185,8 +245,8 @@ def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior):
         hyper_u=HyperParams(P(), P()), hyper_v=HyperParams(P(), P()),
         key=P(), step=P(),
     )
-    plans_in = tuple(P(AXIS) for _ in range(4))
-    return jax.shard_map(
+    plans_in = tuple(P(AXIS) for _ in range(6))
+    return _shard_map(
         sweep,
         mesh=mesh,
         in_specs=(state_spec, plans_in, plans_in, P(AXIS), P(AXIS)),
@@ -208,6 +268,7 @@ class DistributedBPMF:
         alpha: float = 1.5,
         width: int = 32,
         mode: str = "ring",          # ring | allgather
+        engine: str = "einsum",      # einsum | fused (DIST_ENGINES)
         seed: int = 0,
     ):
         if mesh is None:
@@ -218,6 +279,7 @@ class DistributedBPMF:
         self.k = k
         self.alpha = alpha
         self.mode = mode
+        self.engine = engine
         self.global_mean = ratings.mean()
         self.test = test
         centered = ratings.centered()
@@ -243,6 +305,8 @@ class DistributedBPMF:
             to_dev(plan.values),
             to_dev(plan.mask),
             to_dev(plan.seg),
+            to_dev(plan.seg_dense),
+            to_dev(plan.seg_map),
         )
         ids = to_dev(plan.item_ids)
         return ring, ids
@@ -251,10 +315,28 @@ class DistributedBPMF:
         """Per-shard flattened plan vs the FULL counterpart (allgather mode).
 
         Block-local indices are rebased to gathered-global offsets q*n_loc+i.
+        The per-block dense segment ids are rebased the same way (cumulative
+        per-block segment counts), so the flattened seg_dense stays dense
+        and nondecreasing — the fused engine's invariant.
         """
         p, _, r, w = plan.indices.shape
         offs = (np.arange(p) * plan.n_counter_loc)[None, :, None, None]
         idx = plan.indices + offs.astype(np.int32)
+
+        # flatten dense segments across the q blocks of each shard row
+        n_dense = plan.seg_dense[:, :, -1] + 1            # (P, P) segs per block
+        seg_dense = np.zeros((p, p * r), np.int32)
+        seg_map = np.full((p, p * r), plan.n_loc, np.int32)
+        for pp in range(p):
+            off = 0
+            pos = 0
+            for q in range(p):
+                d = int(n_dense[pp, q])
+                seg_dense[pp, q * r:(q + 1) * r] = plan.seg_dense[pp, q] + off
+                seg_map[pp, pos:pos + d] = plan.seg_map[pp, q, :d]
+                off += d
+                pos += d
+
         sh = NamedSharding(self.mesh, P(AXIS))
         to_dev = lambda a: jax.device_put(jnp.asarray(a), sh)
         return (
@@ -262,6 +344,8 @@ class DistributedBPMF:
             to_dev(plan.values.reshape(p, p * r, w)),
             to_dev(plan.mask.reshape(p, p * r, w)),
             to_dev(plan.seg.reshape(p, p * r)),
+            to_dev(seg_dense),
+            to_dev(seg_map),
         )
 
     def _build_sweep(self):
@@ -271,7 +355,8 @@ class DistributedBPMF:
             self.u_flat = self._flat_plans(self.u_plan)
             self.v_flat = self._flat_plans(self.v_plan)
 
-        mapped = make_sweep(self.mesh, self.mode, self.alpha, self.prior)
+        mapped = make_sweep(self.mesh, self.mode, self.alpha, self.prior,
+                            engine=self.engine)
         u_plans = self.u_ring if self.mode == "ring" else self.u_flat
         v_plans = self.v_ring if self.mode == "ring" else self.v_flat
 

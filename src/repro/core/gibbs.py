@@ -14,7 +14,6 @@ statistics for the *next* hyperparameter draw are fused into the sweep.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -24,12 +23,35 @@ import numpy as np
 from repro.core.buckets import Bucket, BucketPlan, plan_buckets
 from repro.core.hyper import (
     HyperParams,
-    NWPrior,
     default_prior,
     init_hyper,
     sample_normal_wishart,
 )
 from repro.data.sparse import SparseRatings, csr_from_coo
+
+# Sweep engines, selecting how per-segment rating statistics are computed
+# and how the posterior systems are solved (docs/architecture.md §4):
+#   reference  seed data flow kept verbatim: einsum row stats, per-bucket
+#              segment_sum + full-size scatter-adds, LAPACK-style 3-solve
+#              sampling. The equivalence oracle and benchmark baseline.
+#   einsum     restructured flow (default): same einsum statistics, but
+#              per-segment outputs written once into their seg_item_ids
+#              slots and the batched substitution solver.
+#   kernel     restructured flow through the two-step Pallas kernels
+#              (masked_syrk + chol_solve_sample; interpret mode off-TPU).
+#   fused      restructured flow through the fused gather→syrk→segment-
+#              reduce kernel: V gathered in-kernel, no row-level
+#              intermediate, optional bf16 gather.
+ENGINES = ("reference", "einsum", "kernel", "fused")
+
+
+def resolve_engine(engine: str | None, use_kernel: bool = False) -> str:
+    """Map the (engine, legacy use_kernel flag) pair onto an ENGINES name."""
+    if engine is None:
+        return "kernel" if use_kernel else "einsum"
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    return engine
 
 
 class FactorStats(NamedTuple):
@@ -62,6 +84,10 @@ class DeviceBucket(NamedTuple):
     seg_ids: jax.Array
     n_segments: int
     seg_item_ids: jax.Array
+    # host-verified: seg_ids == arange(rows), i.e. every row is its own
+    # segment and the per-bucket reduction is the identity (all buckets
+    # except the widest, which splits long-tail items across rows)
+    identity_segments: bool = False
 
 
 def device_plan(
@@ -80,13 +106,45 @@ def device_plan(
             seg_ids=jnp.asarray(b.seg_ids),
             n_segments=b.n_segments,
             seg_item_ids=jnp.asarray(b.seg_item_ids),
+            identity_segments=bool(
+                b.indices.shape[0] == b.n_segments
+                and np.array_equal(
+                    np.asarray(b.seg_ids), np.arange(b.n_segments)
+                )
+            ),
         )
         for b in plan
     )
 
 
+def segment_reduce_rows(
+    rows: jax.Array, seg_ids: jax.Array, n_segments: int, *,
+    stacked: bool = False, sorted_ids: bool = True, identity: bool = False,
+) -> jax.Array:
+    """Row-level statistics -> per-segment sums. The one definition of the
+    bucket segment reduction, shared by every engine (`bucket_stats` here
+    and the fused jnp path in `kernels.ops`): identity skips the reduction
+    outright (every row its own segment), `stacked` rotates a leading draw
+    axis out of the way (segment_sum reduces the leading axis), and
+    `sorted_ids` asserts the planner's nondecreasing-rows invariant to XLA.
+    """
+    if identity:
+        return rows
+    if stacked:
+        perm = (1, 0) + tuple(range(2, rows.ndim))
+        return jax.ops.segment_sum(
+            rows.transpose(perm), seg_ids, n_segments,
+            indices_are_sorted=sorted_ids,
+        ).transpose(perm)
+    return jax.ops.segment_sum(
+        rows, seg_ids, n_segments, indices_are_sorted=sorted_ids
+    )
+
+
 def bucket_stats(
-    counterpart: jax.Array, bucket: DeviceBucket, *, use_kernel: bool = False
+    counterpart: jax.Array, bucket: DeviceBucket, *,
+    use_kernel: bool = False, engine: str | None = None,
+    bf16_gather: bool = False, interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Per-segment (sum v v^T, sum r v) for one bucket.
 
@@ -96,28 +154,55 @@ def bucket_stats(
     applied against every draw's factors in one batched contraction.
     Returns (prec (..., n_segments, K, K), rhs (..., n_segments, K)) with
     the leading draw axis present iff counterpart carried one.
+
+    `engine` selects the implementation (see ENGINES); the fused engine
+    routes both forms through `kernels.ops.gather_syrk_seg`, so the
+    stacked-draw fold-in rides the same kernel as the training sweep.
     """
+    engine = resolve_engine(engine, use_kernel)
+
+    if engine == "fused":
+        from repro.kernels import ops as kops
+
+        return kops.gather_syrk_seg(
+            bucket.indices, bucket.values, bucket.mask,
+            bucket.seg_ids, bucket.n_segments, counterpart,
+            bf16_gather=bf16_gather,
+            identity_segments=bucket.identity_segments,
+            interpret=interpret,
+        )
+
+    # identity reduction is exact (a permutation-free relabeling), so the
+    # restructured einsum engine skips it; the reference engine keeps the
+    # seed computation verbatim
+    skip_reduce = engine == "einsum" and bucket.identity_segments
+    sorted_ids = engine != "reference"
+
+    def reduce(rows, rotate):
+        return segment_reduce_rows(
+            rows, bucket.seg_ids, bucket.n_segments, stacked=rotate,
+            sorted_ids=sorted_ids, identity=skip_reduce,
+        )
+
+    rv = bucket.values * bucket.mask
     if counterpart.ndim == 2:
         vg = counterpart[bucket.indices]                # (rows, w, K)
         vm = vg * bucket.mask[..., None]
-        if use_kernel:
+        if engine == "kernel":
             from repro.kernels import ops as kops
 
-            prec_rows, rhs_rows = kops.masked_syrk(vm, bucket.values * bucket.mask)
+            prec_rows, rhs_rows = kops.masked_syrk(vm, rv)
         else:
             prec_rows = jnp.einsum(
                 "rwk,rwl->rkl", vm, vm, preferred_element_type=jnp.float32
             )
-            rhs_rows = jnp.einsum("rwk,rw->rk", vm, bucket.values * bucket.mask)
-        prec = jax.ops.segment_sum(prec_rows, bucket.seg_ids, bucket.n_segments)
-        rhs = jax.ops.segment_sum(rhs_rows, bucket.seg_ids, bucket.n_segments)
-        return prec, rhs
+            rhs_rows = jnp.einsum("rwk,rw->rk", vm, rv)
+        return reduce(prec_rows, False), reduce(rhs_rows, False)
 
     # stacked draws: one gather + one contraction covering all S draws
     vg = counterpart[:, bucket.indices]                 # (S, rows, w, K)
     vm = vg * bucket.mask[..., None]
-    rv = bucket.values * bucket.mask
-    if use_kernel:
+    if engine == "kernel":
         from repro.kernels import ops as kops
 
         prec_rows, rhs_rows = kops.masked_syrk(
@@ -128,19 +213,49 @@ def bucket_stats(
             "srwk,srwl->srkl", vm, vm, preferred_element_type=jnp.float32
         )
         rhs_rows = jnp.einsum("srwk,rw->srk", vm, rv)
-    # segment_sum reduces the leading axis; rotate rows to the front and back
-    prec = jax.ops.segment_sum(
-        prec_rows.transpose(1, 0, 2, 3), bucket.seg_ids, bucket.n_segments
-    ).transpose(1, 0, 2, 3)
-    rhs = jax.ops.segment_sum(
-        rhs_rows.transpose(1, 0, 2), bucket.seg_ids, bucket.n_segments
-    ).transpose(1, 0, 2)
-    return prec, rhs
+    return reduce(prec_rows, True), reduce(rhs_rows, True)
+
+
+def chol_subst_solve(chol: jax.Array, rhs: jax.Array, z: jax.Array) -> jax.Array:
+    """x = L^-T (L^-1 rhs + z) via batch-vectorized substitution.
+
+    XLA's batched `triangular_solve` dispatches per batch element on CPU
+    and dominates the sweep (it is the seed path's real bottleneck, not the
+    syrk). This runs the two substitutions as K fixed-shape steps over the
+    whole batch — full-width dot products are exact because not-yet-solved
+    entries are still zero — and merges the mean and noise solves into one
+    backward pass. Works for any leading batch axes.
+    """
+    k = chol.shape[-1]
+
+    def fwd(i, y):
+        row = jax.lax.dynamic_slice_in_dim(chol, i, 1, axis=-2)[..., 0, :]
+        d = jax.lax.dynamic_slice_in_dim(row, i, 1, axis=-1)[..., 0]
+        yi = (
+            jax.lax.dynamic_slice_in_dim(rhs, i, 1, axis=-1)[..., 0]
+            - jnp.sum(row * y, -1)
+        ) / d
+        return jax.lax.dynamic_update_slice_in_dim(y, yi[..., None], i, axis=-1)
+
+    c = jax.lax.fori_loop(0, k, fwd, jnp.zeros_like(rhs)) + z
+
+    def bwd(j, x):
+        i = k - 1 - j
+        col = jax.lax.dynamic_slice_in_dim(chol, i, 1, axis=-1)[..., 0]
+        d = jax.lax.dynamic_slice_in_dim(col, i, 1, axis=-1)[..., 0]
+        xi = (
+            jax.lax.dynamic_slice_in_dim(c, i, 1, axis=-1)[..., 0]
+            - jnp.sum(col * x, -1)
+        ) / d
+        return jax.lax.dynamic_update_slice_in_dim(x, xi[..., None], i, axis=-1)
+
+    return jax.lax.fori_loop(0, k, bwd, jnp.zeros_like(rhs))
 
 
 def sample_mvn_precision(
     key: jax.Array | None, prec: jax.Array, rhs: jax.Array,
-    *, z: jax.Array | None = None, use_kernel: bool = False
+    *, z: jax.Array | None = None, use_kernel: bool = False,
+    solver: str | None = None,
 ) -> jax.Array:
     """x ~ N(prec^-1 rhs, prec^-1), batched over any leading axes.
 
@@ -151,18 +266,27 @@ def sample_mvn_precision(
     as rhs) overrides the key: the batched fold-in pre-draws its noise with
     the per-draw key sequence of the original per-sample loop, so fused and
     looped sampling consume identical random bits.
+
+    solver: "subst" (default) — batch-vectorized substitution, the fast
+    path everywhere; "lapack" — the seed 3-triangular-solve formulation
+    (retained for the reference engine); "kernel" — the Pallas
+    chol_solve_sample kernel. All three agree to fp32 rounding.
     """
+    if solver is None:
+        solver = "kernel" if use_kernel else "subst"
     if z is None:
         z = (
             jnp.zeros_like(rhs)
             if key is None
             else jax.random.normal(key, rhs.shape, rhs.dtype)
         )
-    if use_kernel:
+    if solver == "kernel":
         from repro.kernels import ops as kops
 
         return kops.chol_solve_sample(prec, rhs, z)
     chol = jnp.linalg.cholesky(prec)
+    if solver == "subst":
+        return chol_subst_solve(chol, rhs, z)
     y = jax.lax.linalg.triangular_solve(
         chol, rhs[..., None], left_side=True, lower=True
     )
@@ -184,24 +308,55 @@ def update_factors(
     alpha: float,
     *,
     use_kernel: bool = False,
+    engine: str | None = None,
+    bf16_gather: bool = False,
 ) -> tuple[jax.Array, FactorStats]:
     """One half-sweep: resample every item factor given the counterpart matrix.
 
     Also returns the sufficient statistics of the *new* factor matrix (fused
     aggregation, paper Sec 3.1).
+
+    The restructured flow (every engine except "reference") writes each
+    bucket's per-segment statistics straight into their seg_item_ids slots:
+    the per-item buffers start as the broadcast hyper-prior and receive ONE
+    scatter-add of the concatenated per-segment outputs — the bucket plan
+    partitions items, so indices are unique and items with no ratings keep
+    the prior, exactly as in the seed flow. The seed flow's per-bucket
+    full-size zero buffers and double scatter passes are gone.
     """
+    engine = resolve_engine(engine, use_kernel)
     k = counterpart.shape[-1]
     dtype = counterpart.dtype
-    prec_all = jnp.zeros((n_items, k, k), dtype)
-    rhs_all = jnp.zeros((n_items, k), dtype)
-    for b in buckets:
-        prec, rhs = bucket_stats(counterpart, b, use_kernel=use_kernel)
-        prec_all = prec_all.at[b.seg_item_ids].add(prec)
-        rhs_all = rhs_all.at[b.seg_item_ids].add(rhs)
 
-    prec_all = hyper.lam[None] + alpha * prec_all
-    rhs_all = (hyper.lam @ hyper.mu)[None] + alpha * rhs_all
-    new = sample_mvn_precision(key, prec_all, rhs_all, use_kernel=use_kernel)
+    if engine == "reference":
+        prec_all = jnp.zeros((n_items, k, k), dtype)
+        rhs_all = jnp.zeros((n_items, k), dtype)
+        for b in buckets:
+            prec, rhs = bucket_stats(counterpart, b, engine="reference")
+            prec_all = prec_all.at[b.seg_item_ids].add(prec)
+            rhs_all = rhs_all.at[b.seg_item_ids].add(rhs)
+        prec_all = hyper.lam[None] + alpha * prec_all
+        rhs_all = (hyper.lam @ hyper.mu)[None] + alpha * rhs_all
+        new = sample_mvn_precision(key, prec_all, rhs_all, solver="lapack")
+    else:
+        seg = [
+            bucket_stats(counterpart, b, engine=engine, bf16_gather=bf16_gather)
+            for b in buckets
+        ]
+        ids = jnp.concatenate([b.seg_item_ids for b in buckets])
+        prec_cat = jnp.concatenate([p for p, _ in seg])
+        rhs_cat = jnp.concatenate([r for _, r in seg])
+        prec_all = jnp.broadcast_to(hyper.lam, (n_items, k, k)).astype(dtype)
+        rhs_all = jnp.broadcast_to(hyper.lam @ hyper.mu, (n_items, k)).astype(dtype)
+        prec_all = prec_all.at[ids].add(
+            (alpha * prec_cat).astype(dtype), unique_indices=True
+        )
+        rhs_all = rhs_all.at[ids].add(
+            (alpha * rhs_cat).astype(dtype), unique_indices=True
+        )
+        solver = "kernel" if engine == "kernel" else "subst"
+        new = sample_mvn_precision(key, prec_all, rhs_all, solver=solver)
+
     stats = FactorStats(
         sum_x=new.sum(0),
         sum_xxt=jnp.einsum("nk,nl->kl", new, new, preferred_element_type=jnp.float32),
@@ -219,7 +374,15 @@ def factor_stats(x: jax.Array) -> FactorStats:
 
 
 class GibbsSampler:
-    """Single-host BPMF sampler. `jit`-compiled sweep over bucketed plans."""
+    """Single-host BPMF sampler. `jit`-compiled sweep over bucketed plans.
+
+    `engine` selects the sweep implementation (see ENGINES): the
+    restructured einsum flow by default, "fused" for the gather-syrk
+    kernel path, "kernel" for the two-step Pallas path (the legacy
+    `use_kernel=True`), "reference" for the seed flow. `bf16_gather`
+    (fused engine) gathers counterpart factors at half width with fp32
+    accumulation.
+    """
 
     def __init__(
         self,
@@ -231,13 +394,17 @@ class GibbsSampler:
         burn_in: int = 8,
         widths: tuple[int, ...] = (8, 32, 128, 512),
         use_kernel: bool = False,
+        engine: str | None = None,
+        bf16_gather: bool = False,
         dtype=jnp.float32,
     ):
         self.m, self.n = ratings.shape
         self.k = k
         self.alpha = alpha
         self.burn_in = burn_in
-        self.use_kernel = use_kernel
+        self.engine = resolve_engine(engine, use_kernel)
+        self.use_kernel = self.engine == "kernel"
+        self.bf16_gather = bf16_gather
         self.dtype = dtype
         self.global_mean = ratings.mean()
         centered = ratings.centered()
@@ -263,7 +430,7 @@ class GibbsSampler:
             self.test_vals = jnp.zeros((0,), jnp.float32)
 
         self.prior = default_prior(k, dtype)
-        self._sweep = jax.jit(functools.partial(self._sweep_impl))
+        self._sweep = jax.jit(self._sweep_impl)
 
     def init(self, seed: int = 0) -> BPMFState:
         key = jax.random.PRNGKey(seed)
@@ -288,7 +455,7 @@ class GibbsSampler:
         hyper_v = sample_normal_wishart(k_hv, sv.sum_x, sv.sum_xxt, sv.n, self.prior)
         v_new, _ = update_factors(
             k_v, state.u, self.item_buckets, self.n, hyper_v, self.alpha,
-            use_kernel=self.use_kernel,
+            engine=self.engine, bf16_gather=self.bf16_gather,
         )
 
         # Users phase: hyper from U stats, then update U given new V.
@@ -296,7 +463,7 @@ class GibbsSampler:
         hyper_u = sample_normal_wishart(k_hu, su.sum_x, su.sum_xxt, su.n, self.prior)
         u_new, _ = update_factors(
             k_u, v_new, self.user_buckets, self.m, hyper_u, self.alpha,
-            use_kernel=self.use_kernel,
+            engine=self.engine, bf16_gather=self.bf16_gather,
         )
 
         # Posterior-predictive accumulation after burn-in.

@@ -54,7 +54,15 @@ class GridPlan:
     indices/values/mask: (P, P, R, W) — [p, q] holds the width-W padded rows
     of shard p's items whose ratings touch counterpart block q, with indices
     LOCAL to block q. seg: (P, P, R) local item slot each row feeds
-    (n_loc = padding slot). R is the max row count over all (p, q).
+    (n_loc = padding slot). R is the max row count over all (p, q). Rows in
+    a block are sorted by local item slot (pad rows last), so `seg` is
+    nondecreasing per block.
+
+    seg_dense/seg_map support the fused gather-syrk engine's in-kernel
+    segment reduction, which needs DENSE nondecreasing segment ids:
+    seg_dense[p, q] renumbers a block's distinct seg values 0..d-1 in row
+    order; seg_map[p, q, j] is the local item slot dense segment j feeds
+    (n_loc for the pad segment and for unused trailing entries).
     """
 
     n_shards: int
@@ -67,6 +75,8 @@ class GridPlan:
     seg: np.ndarray
     item_ids: np.ndarray     # (P, n_loc) global ids (-1 pad)
     nnz: int
+    seg_dense: np.ndarray    # (P, P, R) dense per-block segment ids
+    seg_map: np.ndarray      # (P, P, R) local item slot per dense segment
 
     @property
     def padded_lanes(self) -> int:
@@ -125,7 +135,9 @@ def build_grid_plan(
 
     for (p, q), d in pq_rows.items():
         r = 0
-        for litem, lst in d.items():
+        # rows sorted by local item slot -> seg nondecreasing within a block
+        # (pad rows carry n_loc and land last), the fused-engine invariant
+        for litem, lst in sorted(d.items()):
             for c0 in range(0, len(lst), width):
                 chunk = lst[c0 : c0 + width]
                 for w, (lc, v) in enumerate(chunk):
@@ -134,6 +146,20 @@ def build_grid_plan(
                     msk[p, q, r, w] = 1.0
                 seg[p, q, r] = litem
                 r += 1
+
+    # dense per-block renumbering of the (sorted) seg values + the map back
+    # to local item slots, for the fused engine's in-kernel reduction
+    seg_dense = np.zeros((n_shards, n_shards, r_max), np.int32)
+    seg_map = np.full((n_shards, n_shards, r_max), item_part.n_loc, np.int32)
+    for p in range(n_shards):
+        for q in range(n_shards):
+            s = seg[p, q]
+            change = np.empty(r_max, bool)
+            change[0] = True
+            change[1:] = s[1:] != s[:-1]
+            dense = np.cumsum(change) - 1
+            seg_dense[p, q] = dense
+            seg_map[p, q, : int(dense[-1]) + 1] = s[change]
 
     return GridPlan(
         n_shards=n_shards,
@@ -146,4 +172,6 @@ def build_grid_plan(
         seg=seg,
         item_ids=item_part.ids,
         nnz=ratings.nnz,
+        seg_dense=seg_dense,
+        seg_map=seg_map,
     )

@@ -1,19 +1,43 @@
-"""Pallas TPU kernel: FUSED gather + masked syrk for BPMF (perf variant).
+"""Pallas TPU kernel: FUSED gather + masked syrk + segment reduce for BPMF.
 
-`bpmf_syrk.py` consumes a pre-gathered (R, W, K) block of counterpart
-factors — which the caller had to materialize in HBM first (gather write +
-kernel read = 2x the gathered bytes, the dominant traffic of the BPMF
-roofline cells). This kernel keeps the factor matrix V in HBM/ANY space and
-gathers rows *inside* the kernel while accumulating the outer products in
-VMEM, so the gathered block never round-trips through HBM:
+The training sweep's hot loop is, per bucket row r with counterpart ids
+idx[r, :] and ratings val[r, :]:
 
-    per row r:  prec_r = sum_w  V[idx[r,w]] V[idx[r,w]]^T * mask[r,w]
-                rhs_r  = sum_w  V[idx[r,w]] * val[r,w]
+    prec_r = sum_w  V[idx[r,w]] V[idx[r,w]]^T * mask[r,w]
+    rhs_r  = sum_w  V[idx[r,w]] * val[r,w] * mask[r,w]
 
-Grid: one step per row block; the W loop runs inside the kernel with
-dynamic-index loads from the V ref (scalar-prefetch style). Validated in
-interpret mode against the two-step reference (`ops.masked_syrk` on a
-host-side gather).
+followed by a per-item segment reduction over rows (long-tail items are
+split across rows). The two-step path (`bpmf_syrk.py`) makes the gathered
+(R, W, K) factor block round-trip through HBM (gather write + kernel read)
+and then materializes the row-level (R, K, K) precision intermediate for a
+separate `segment_sum` — on the BPMF roofline those two are the dominant
+memory terms. This kernel eliminates both:
+
+  * V stays in HBM/ANY space; rows are gathered *inside* the kernel with
+    double-buffered per-row DMA into a (2, BR, BW, K) VMEM scratch — the
+    W axis is tiled, and tile t+1's row DMAs are issued before tile t is
+    consumed, so the gather streams HBM exactly once.
+  * The masked outer-product sum runs on the MXU (`dot_general` over the
+    W tile) into fp32 accumulators. With a bf16 V the caller passes the
+    factor matrix pre-cast (one cast amortized over every gathered row
+    read) and only the accumulation is fp32 — halving the gather traffic.
+  * Segment reduction happens *in kernel*: bucket rows are ordered by
+    segment (nondecreasing, dense 0..n_segments-1 — the planner invariant),
+    so the rows of one grid step span at most `block_rows` consecutive
+    segments. A one-hot (BR, BR) matmul collapses the row block to
+    per-segment partials which are accumulated into the output range
+    [seg0, seg0 + BR) — per-segment (prec, rhs) exit the kernel directly
+    and the (R, K, K) row-level intermediate never exists.
+
+A leading stacked-draw axis (V of shape (S, N, K), e.g. the serving
+fold-in's S retained draws) becomes the slow grid dimension: the same plan
+block is swept against every draw's factors.
+
+The accumulating output writes rely on the TPU grid being sequential
+(default dimension semantics — no "parallel" annotation); outputs are
+zero-initialized through `input_output_aliases`. Validated in interpret
+mode against the einsum reference; on real hardware the ANY-space
+load/store pair on the output range lowers to a VMEM round trip per block.
 """
 from __future__ import annotations
 
@@ -25,70 +49,166 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_syrk_kernel(idx_ref, val_ref, msk_ref, v_ref, prec_ref, rhs_ref,
-                        *, width: int):
+def _gather_syrk_seg_kernel(
+    seg_ref,                      # scalar prefetch: (R,) int32, nondecreasing
+    idx_ref, val_ref, msk_ref,    # (BR, W) VMEM row blocks
+    v_ref,                        # ANY: (N, K) or (S, N, K) — gathered in-kernel
+    pz_ref, rz_ref,               # zero inits, aliased onto the outputs
+    prec_ref, rhs_ref,            # ANY outputs: (..., P, K, K), (..., P, K)
+    gather_buf,                   # VMEM scratch: (2, BR, BW, K)
+    dma_sem,                      # DMA semaphores: (2,)
+    *, width: int, block_w: int, block_rows: int, stacked: bool,
+):
+    del pz_ref, rz_ref  # aliased zero-init buffers; written via prec/rhs refs
+    i = pl.program_id(1) if stacked else pl.program_id(0)
+    s = pl.program_id(0) if stacked else None
     br = idx_ref.shape[0]
-    k = v_ref.shape[1]
+    k = v_ref.shape[-1]
+    n_wt = width // block_w
 
-    def w_step(w, carry):
-        prec, rhs = carry
+    def row_dma(slot, wt, t):
+        """Async copy of one gathered V row into the tile's scratch slot."""
+        r = t // block_w
+        w = t % block_w
+        j = idx_ref[r, wt * block_w + w]
+        src = (v_ref.at[s, pl.dslice(j, 1), :] if stacked
+               else v_ref.at[pl.dslice(j, 1), :])
+        return pltpu.make_async_copy(
+            src, gather_buf.at[slot, r, pl.dslice(w, 1), :], dma_sem.at[slot]
+        )
 
-        def r_step(r, carry2):
-            prec, rhs = carry2
-            j = idx_ref[r, w]
-            row = pl.load(v_ref, (pl.dslice(j, 1), slice(None)))[0]   # (K,)
-            m = msk_ref[r, w]
-            vv = val_ref[r, w]
-            rowm = row * m
-            outer = rowm[:, None] * row[None, :]
-            prec = jax.lax.dynamic_update_slice(
-                prec, (jax.lax.dynamic_slice(prec, (r, 0, 0), (1, k, k))[0]
-                       + outer)[None], (r, 0, 0))
-            rhs = jax.lax.dynamic_update_slice(
-                rhs, (jax.lax.dynamic_slice(rhs, (r, 0), (1, k))[0]
-                      + row * (vv * m))[None], (r, 0))
-            return prec, rhs
+    def tile_start(slot, wt):
+        jax.lax.fori_loop(
+            0, br * block_w, lambda t, _: (row_dma(slot, wt, t).start(), 0)[1], 0
+        )
 
-        return jax.lax.fori_loop(0, br, r_step, (prec, rhs))
+    def tile_wait(slot, wt):
+        jax.lax.fori_loop(
+            0, br * block_w, lambda t, _: (row_dma(slot, wt, t).wait(), 0)[1], 0
+        )
 
-    prec0 = jnp.zeros((br, k, k), jnp.float32)
-    rhs0 = jnp.zeros((br, k), jnp.float32)
-    prec, rhs = jax.lax.fori_loop(0, width, w_step, (prec0, rhs0))
-    prec_ref[...] = prec
-    rhs_ref[...] = rhs
+    # double-buffered W tiles: issue tile t+1's row DMAs before consuming t
+    tile_start(0, 0)
+    acc_p = jnp.zeros((br, k, k), jnp.float32)
+    acc_r = jnp.zeros((br, k), jnp.float32)
+    for wt in range(n_wt):  # static unroll: width // block_w is small
+        if wt + 1 < n_wt:
+            tile_start((wt + 1) % 2, wt + 1)
+        tile_wait(wt % 2, wt)
+        g = gather_buf[wt % 2]                                 # (BR, BW, K)
+        m = msk_ref[:, wt * block_w:(wt + 1) * block_w]        # (BR, BW)
+        vv = val_ref[:, wt * block_w:(wt + 1) * block_w]
+        gm = g * m[..., None].astype(g.dtype)
+        # fp32 accumulation over a possibly-bf16 gathered block (MXU shapes)
+        acc_p += jax.lax.dot_general(
+            gm, g, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+        acc_r += jax.lax.dot_general(
+            (vv * m)[:, None, :], gm.astype(jnp.float32),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )[:, 0, :]
+
+    # in-kernel segment reduction: rows are segment-sorted and dense, so this
+    # block's segments span [seg0, seg0 + BR); collapse with a one-hot matmul
+    seg_blk = seg_ref[pl.dslice(i * block_rows, block_rows)]
+    seg0 = seg_blk[0]
+    local = seg_blk - seg0                                     # (BR,) in [0, BR)
+    onehot = (
+        local[None, :] == jax.lax.broadcasted_iota(jnp.int32, (br, br), 0)
+    ).astype(jnp.float32)
+    part_p = jax.lax.dot_general(
+        onehot, acc_p.reshape(br, k * k), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(br, k, k)
+    part_r = jax.lax.dot_general(
+        onehot, acc_r, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # accumulate into the owned/overlapping output range (sequential grid)
+    if stacked:
+        pidx = (s, pl.dslice(seg0, br), slice(None), slice(None))
+        ridx = (s, pl.dslice(seg0, br), slice(None))
+    else:
+        pidx = (pl.dslice(seg0, br), slice(None), slice(None))
+        ridx = (pl.dslice(seg0, br), slice(None))
+    pl.store(prec_ref, pidx, pl.load(prec_ref, pidx) + part_p)
+    pl.store(rhs_ref, ridx, pl.load(rhs_ref, ridx) + part_r)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gather_syrk_pallas(
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_seg_padded", "block_rows", "block_w", "interpret"),
+)
+def gather_syrk_seg_pallas(
     indices: jax.Array,   # (R, W) int32 — rows of v to gather
     values: jax.Array,    # (R, W) f32
-    mask: jax.Array,      # (R, W) f32
-    v: jax.Array,         # (N, K) f32 — stays in HBM/ANY space
+    mask: jax.Array,      # (R, W) f32 (0/1)
+    seg_ids: jax.Array,   # (R,) int32 — nondecreasing dense segment per row
+    v: jax.Array,         # (N, K) or (S, N, K); f32 or bf16 (bf16-gather mode)
     *,
+    n_seg_padded: int,    # >= max(seg_ids) + block_rows, tile-aligned
     block_rows: int = 8,
+    block_w: int = 128,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
+    """Fused gather→syrk→segment-reduce. Returns per-SEGMENT statistics
+
+        prec (..., n_seg_padded, K, K), rhs (..., n_seg_padded, K)
+
+    with a leading draw axis iff ``v`` carried one. Rows must arrive
+    segment-sorted (callers: `kernels.ops.gather_syrk_seg` pads + checks).
+    """
     r, w = indices.shape
-    n, k = v.shape
-    assert r % block_rows == 0, (r, block_rows)
-    grid = (r // block_rows,)
-    kernel = functools.partial(_gather_syrk_kernel, width=w)
-    return pl.pallas_call(
-        kernel,
+    stacked = v.ndim == 3
+    k = v.shape[-1]
+    assert r % block_rows == 0 and w % block_w == 0, (r, w, block_rows, block_w)
+    kernel = functools.partial(
+        _gather_syrk_seg_kernel, width=w, block_w=block_w,
+        block_rows=block_rows, stacked=stacked,
+    )
+    grid = (v.shape[0], r // block_rows) if stacked else (r // block_rows,)
+    lead = (v.shape[0],) if stacked else ()
+
+    # index maps receive (*grid_indices, seg_prefetch_ref); the row-block
+    # index is always the fastest-varying grid axis
+    def row_block(*args):
+        *ids, _seg = args
+        i = ids[-1]
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),   # V: gathered in-kernel
+            pl.BlockSpec((block_rows, w), row_block),
+            pl.BlockSpec((block_rows, w), row_block),
+            pl.BlockSpec((block_rows, w), row_block),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # v: gathered in-kernel
+            pl.BlockSpec(memory_space=pltpu.ANY),   # zero init (aliased)
+            pl.BlockSpec(memory_space=pltpu.ANY),   # zero init (aliased)
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, k, k), lambda i: (i, 0, 0)),
-            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_rows, block_w, k), v.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    pz = jnp.zeros(lead + (n_seg_padded, k, k), jnp.float32)
+    rz = jnp.zeros(lead + (n_seg_padded, k), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((r, k, k), jnp.float32),
-            jax.ShapeDtypeStruct((r, k), jnp.float32),
+            jax.ShapeDtypeStruct(pz.shape, jnp.float32),
+            jax.ShapeDtypeStruct(rz.shape, jnp.float32),
         ],
+        # indices count the scalar-prefetch arg: 5/6 are the zero inits
+        input_output_aliases={5: 0, 6: 1},
         interpret=interpret,
-    )(indices, values, mask, v)
+    )(seg_ids, indices, values, mask, v, pz, rz)

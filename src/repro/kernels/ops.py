@@ -5,8 +5,6 @@ non-TPU backends (this container is CPU-only; TPU is the deployment target).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -53,7 +51,6 @@ def masked_syrk(vm: jax.Array, rv: jax.Array, *, interpret: bool | None = None):
     prec, rhs = masked_syrk_pallas(
         vm_p, rv_p, block_rows=block_rows, block_w=block_w, interpret=interpret
     )
-    kp = vm_p.shape[2]
     return prec[:r, :k, :k], rhs[:r, :k]
 
 
@@ -148,24 +145,123 @@ def topn_scores(u: jax.Array, v: jax.Array, topk: int,
     return vals[:b], idx[:b]
 
 
-def gather_syrk(indices: jax.Array, values: jax.Array, mask: jax.Array,
-                v: jax.Array, *, interpret: bool | None = None):
-    """Fused gather+syrk: V stays in HBM, rows gathered in-kernel (R % 8 pad).
+def _gather_syrk_seg_jnp(
+    indices, values, mask, seg_ids, n_segments, v,
+    *, bf16_gather, identity_segments,
+):
+    """Fused-semantics jnp path (the off-TPU engine and the XLA fallback).
 
-    Eliminates the (R, W, K) gathered-block round trip of the two-step path
-    — on the BPMF roofline the gathered bytes are the dominant traffic, so
-    this halves the memory term of the update sweep.
+    Same contraction order as the kernel: gather → masked MXU-style
+    dot_general with fp32 accumulation → sorted segment reduction (skipped
+    when every row is its own segment — the common narrow-bucket case, where
+    the "reduction" is the identity).
     """
-    from repro.kernels.bpmf_gather_syrk import gather_syrk_pallas
+    stacked = v.ndim == 3
+    if bf16_gather:
+        v = v.astype(jnp.bfloat16)
+    g = v[:, indices] if stacked else v[indices]      # (..., R, W, K)
+    gm = g * mask[..., None].astype(g.dtype)
+    rv = values * mask
+    nb = g.ndim - 2                                    # batch dims: (...,) + R
+    batch = tuple(range(nb))
+    prec_rows = jax.lax.dot_general(
+        gm, g, (((nb,), (nb,)), (batch, batch)),
+        preferred_element_type=jnp.float32,
+    )
+    rhs_rows = jax.lax.dot_general(
+        gm.astype(jnp.float32),
+        jnp.broadcast_to(rv, gm.shape[:-1])[..., None],
+        (((nb,), (nb,)), (batch, batch)),
+        preferred_element_type=jnp.float32,
+    )[..., 0]
+    # one shared definition of the segment reduction (lazy import: gibbs
+    # imports this module lazily too, so neither import is circular)
+    from repro.core.gibbs import segment_reduce_rows
 
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    prec = segment_reduce_rows(
+        prec_rows, seg_ids, n_segments,
+        stacked=stacked, identity=identity_segments,
+    )
+    rhs = segment_reduce_rows(
+        rhs_rows, seg_ids, n_segments,
+        stacked=stacked, identity=identity_segments,
+    )
+    return prec, rhs
+
+
+def gather_syrk_seg(
+    indices: jax.Array,    # (R, W) int32
+    values: jax.Array,     # (R, W) f32
+    mask: jax.Array,       # (R, W) f32
+    seg_ids: jax.Array,    # (R,) int32 — NONDECREASING dense 0..n_segments-1
+    n_segments: int,
+    v: jax.Array,          # (N, K) counterpart factors, or (S, N, K) stacked
+    *,
+    bf16_gather: bool = False,
+    identity_segments: bool = False,
+    interpret: bool | None = None,
+):
+    """Fused gather→syrk→segment-reduce: per-SEGMENT (prec, rhs) directly.
+
+    The sweep's fused engine. On TPU this is the Pallas kernel (V gathered
+    from ANY space, in-kernel segment reduction — the gathered block and the
+    row-level (R, K, K) intermediate never touch HBM); elsewhere a
+    fused-semantics jnp path with identical contraction order. Pass
+    ``interpret=True`` to force the real kernel in interpret mode (the
+    equivalence tests); None/False off-TPU both mean the jnp path — a
+    compiled Mosaic kernel does not exist there. Rows must be
+    segment-sorted — the bucket/grid planner invariant; `bf16_gather`
+    halves the dominant gather traffic and keeps fp32 accumulation
+    (tolerance documented in docs/architecture.md).
+
+    Returns prec (..., n_segments, K, K), rhs (..., n_segments, K), with the
+    leading stacked-draw axis present iff ``v`` carried one.
+    """
+    use_pallas = interpret is True or _on_tpu()
+    if not use_pallas:
+        return _gather_syrk_seg_jnp(
+            indices, values, mask, seg_ids, n_segments, v,
+            bf16_gather=bf16_gather, identity_segments=identity_segments,
+        )
+
+    from repro.kernels.bpmf_gather_syrk import gather_syrk_seg_pallas
+
+    interpret = (not _on_tpu()) if interpret is None else bool(interpret)
     r, w = indices.shape
     block_rows = 8
-    pad = (-r) % block_rows
-    if pad:
-        indices = jnp.pad(indices, ((0, pad), (0, 0)))
-        values = jnp.pad(values, ((0, pad), (0, 0)))
-        mask = jnp.pad(mask, ((0, pad), (0, 0)))
-    prec, rhs = gather_syrk_pallas(indices, values, mask, v,
-                                   block_rows=block_rows, interpret=interpret)
-    return prec[:r], rhs[:r]
+    block_w = min(128, max(8, w))
+    pad_r = (-r) % block_rows
+    if pad_r:
+        indices = jnp.pad(indices, ((0, pad_r), (0, 0)))
+        values = jnp.pad(values, ((0, pad_r), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad_r), (0, 0)))
+        # pad rows carry mask 0 and repeat the LAST segment id, keeping the
+        # nondecreasing invariant while contributing exact zeros
+        seg_ids = jnp.pad(seg_ids, (0, pad_r), mode="edge")
+    indices = _pad_to(indices, 1, block_w)
+    values = _pad_to(values, 1, block_w)
+    mask = _pad_to(mask, 1, block_w)
+    if bf16_gather:
+        v = v.astype(jnp.bfloat16)   # one cast; every gathered read is half-width
+    n_seg_padded = n_segments + block_rows
+    n_seg_padded += (-n_seg_padded) % 8
+    prec, rhs = gather_syrk_seg_pallas(
+        indices, values, mask, seg_ids, v,
+        n_seg_padded=n_seg_padded, block_rows=block_rows, block_w=block_w,
+        interpret=interpret,
+    )
+    return prec[..., :n_segments, :, :], rhs[..., :n_segments, :]
+
+
+def gather_syrk(indices: jax.Array, values: jax.Array, mask: jax.Array,
+                v: jax.Array, *, interpret: bool | None = None):
+    """Row-level fused gather+syrk (no segment reduction): each row is its
+    own segment. Kept for callers that need per-row statistics; the sweep
+    engines use `gather_syrk_seg`.
+    """
+    r = indices.shape[0]
+    seg = jnp.arange(r, dtype=jnp.int32)
+    return gather_syrk_seg(
+        indices, values, mask, seg, r, v,
+        identity_segments=True, interpret=interpret,
+    )

@@ -74,6 +74,8 @@ def run_cell(dataset: str, mode: str, multi_pod: bool, k: int = 64, width: int =
                 sds((p, p, rows, width), f32),
                 sds((p, p, rows, width), f32),
                 sds((p, p, rows), i32),
+                sds((p, p, rows), i32),      # seg_dense
+                sds((p, p, rows), i32),      # seg_map
             )
 
         if mode == "allgather":
@@ -83,6 +85,8 @@ def run_cell(dataset: str, mode: str, multi_pod: bool, k: int = 64, width: int =
                     sds((p, p * rows, width), f32),
                     sds((p, p * rows, width), f32),
                     sds((p, p * rows), i32),
+                    sds((p, p * rows), i32),  # seg_dense
+                    sds((p, p * rows), i32),  # seg_map
                 )
 
         state_sds = DistState(
@@ -106,7 +110,7 @@ def run_cell(dataset: str, mode: str, multi_pod: bool, k: int = 64, width: int =
             hyper_v=HyperParams(shard(P()), shard(P())),
             key=shard(P()), step=shard(P()),
         )
-        plan_sh = tuple(shard(P(AXIS)) for _ in range(4))
+        plan_sh = tuple(shard(P(AXIS)) for _ in range(6))
         jitted = jax.jit(
             sweep,
             in_shardings=(state_sh, plan_sh, plan_sh, shard(P(AXIS)), shard(P(AXIS))),

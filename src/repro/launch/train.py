@@ -20,7 +20,6 @@ of the same overlapped process).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -122,7 +121,8 @@ def bpmf_train_main(args) -> None:
     print(f"training {train.shape[0]} x {train.shape[1]} ({train.nnz} ratings), "
           f"k={args.k}, {args.sweeps} sweeps (burn-in {args.burn_in}) -> {root}")
     sampler = GibbsSampler(train, test, k=args.k, alpha=4.0,
-                           burn_in=args.burn_in, widths=(8, 32, 128))
+                           burn_in=args.burn_in, widths=(8, 32, 128),
+                           engine=args.engine)
     store = SampleStore(root, keep=args.keep)
     state = sampler.run(args.sweeps, seed=args.seed, store=store, verbose=True)
     print(f"test rmse {sampler.rmse(state):.4f}; retained "
@@ -148,6 +148,10 @@ def main():
     ap.add_argument("--scale", type=float, default=0.01,
                     help="movielens_like dataset scale")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default=None,
+                    choices=["reference", "einsum", "kernel", "fused"],
+                    help="sweep engine (default: restructured einsum; "
+                         "'fused' = gather-syrk kernel path)")
     ap.add_argument("--co-serve", action="store_true",
                     help="serve live recommendations from this process while "
                          "training, via the async publication channel")

@@ -156,7 +156,7 @@ class FoldInPlanCache:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("plan_key", "n_new", "use_kernel")
+    jax.jit, static_argnames=("plan_key", "n_new", "engine")
 )
 def _fused_fold_in(
     v: jax.Array,           # (S, N, K) stacked item factors
@@ -166,9 +166,9 @@ def _fused_fold_in(
     arrays: tuple,          # per bucket: (indices, values, mask, seg_ids, seg_item_ids)
     z: jax.Array | None,    # (S, n_new, K) pre-drawn noise, or None for the mean
     *,
-    plan_key: tuple,        # per bucket: (width, n_segments) — static shapes
+    plan_key: tuple,        # per bucket: (width, n_segments, identity) — static
     n_new: int,
-    use_kernel: bool,
+    engine: str,
 ) -> jax.Array:
     """One batched (S*B) assembly + Cholesky solve for the whole fold-in."""
     global _trace_count
@@ -176,19 +176,23 @@ def _fused_fold_in(
     s, _, k = v.shape
     prec = jnp.zeros((s, n_new, k, k), v.dtype)
     rhs = jnp.zeros((s, n_new, k), v.dtype)
-    for (width, n_segments), (idx, vals, mask, seg_ids, seg_item_ids) in zip(
+    for (width, n_segments, identity), (idx, vals, mask, seg_ids, seg_item_ids) in zip(
         plan_key, arrays
     ):
         b = DeviceBucket(
             width=width, indices=idx, values=vals, mask=mask,
             seg_ids=seg_ids, n_segments=n_segments, seg_item_ids=seg_item_ids,
+            identity_segments=identity,
         )
-        p, r = bucket_stats(v, b, use_kernel=use_kernel)  # (S, segs, ...)
+        # stacked-draw bucket stats: the fused engine rides the same
+        # gather-syrk kernel as the training sweep (leading S axis)
+        p, r = bucket_stats(v, b, engine=engine)  # (S, segs, ...)
         prec = prec.at[:, seg_item_ids].add(p)
         rhs = rhs.at[:, seg_item_ids].add(r)
     prec = lam[:, None] + alpha * prec
     rhs = jnp.einsum("skl,sl->sk", lam, mu)[:, None] + alpha * rhs
-    return sample_mvn_precision(None, prec, rhs, z=z, use_kernel=use_kernel)
+    solver = "kernel" if engine == "kernel" else "subst"
+    return sample_mvn_precision(None, prec, rhs, z=z, solver=solver)
 
 
 def _check_fold_in_args(
@@ -230,6 +234,7 @@ def fold_in(
     sample: bool = True,
     widths: tuple[int, ...] = DEFAULT_WIDTHS,
     use_kernel: bool = False,
+    engine: str | None = None,
     plan_cache: FoldInPlanCache | None = None,
 ) -> jax.Array:
     """Factor posteriors for a batch of new users from their ratings alone.
@@ -251,7 +256,14 @@ def fold_in(
     batches with similar rating-count profiles reuse compiled executables
     (the serving hot path; `widths` is taken from the cache). Without one,
     the plan is built at exact shapes (bit-parity with `fold_in_loop`).
+
+    engine: sweep engine for the bucket statistics and solve
+    (core.gibbs.ENGINES) — "fused" routes the stacked-draw statistics
+    through the same gather-syrk kernel as the training sweep.
     """
+    from repro.core.gibbs import resolve_engine
+
+    engine = resolve_engine(engine, use_kernel)
     _check_fold_in_args(key, ratings, ensemble, sample)
     n_new = ratings.shape[0]
     s, k = ensemble.n_samples, ensemble.k
@@ -291,7 +303,17 @@ def fold_in(
         else:
             padded_batch = n_new
         db = device_plan(buckets)
-        plan_key = tuple((b.width, b.n_segments) for b in db)
+        # under a plan cache the static key must be a function of the
+        # quantized SCHEMA alone: identity_segments is computed from the
+        # padded seg_ids contents, which can differ between two batches
+        # that share a schema (e.g. padding by one row makes seg_ids
+        # exactly arange) — letting it through would retrace on a cache
+        # hit and break the trace-flat contract
+        plan_key = tuple(
+            (b.width, b.n_segments,
+             False if plan_cache is not None else b.identity_segments)
+            for b in db
+        )
         arrays = tuple(
             (b.indices, b.values, b.mask, b.seg_ids, b.seg_item_ids)
             for b in db
@@ -305,7 +327,7 @@ def fold_in(
     out = _fused_fold_in(
         ensemble.v, ensemble.hyper_u_lam, ensemble.hyper_u_mu,
         ensemble.alpha, arrays, z,
-        plan_key=plan_key, n_new=padded_batch, use_kernel=use_kernel,
+        plan_key=plan_key, n_new=padded_batch, engine=engine,
     )
     return out[:, :n_new]  # drop batch padding (padded rows solve the prior)
 
