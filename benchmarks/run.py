@@ -9,6 +9,7 @@ perf trajectory is comparable across PRs. Figures:
   rmse   accuracy parity across all samplers + ALS baseline (Sec 5.2 / 6)
   roofline  per-(arch x shape) dry-run roofline summary
   serve  BPMF top-N serving qps + latency vs request batch size
+  serve_cluster  multi-host tier: qps vs n_hosts, merge overhead, barrier
   publish  publish-to-fresh-recommendation latency, push channel vs disk poll
   foldin  cold-start fold-in: fused (S*B) solve vs per-draw loop, plan cache
   sweep  training-sweep engines: reference vs restructured vs fused
@@ -22,7 +23,7 @@ import traceback
 def main() -> None:
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
     from benchmarks import foldin_latency, publish_latency, rmse_table
-    from benchmarks import roofline, serve_topn, sweep_throughput
+    from benchmarks import roofline, serve_cluster, serve_topn, sweep_throughput
     from benchmarks.common import write_bench_json
 
     # sweep runs before roofline: roofline's measured-vs-predicted rows
@@ -37,6 +38,7 @@ def main() -> None:
         ("sweep", sweep_throughput.main, True),
         ("roofline", roofline.main, False),
         ("serve", serve_topn.main, False),
+        ("serve_cluster", serve_cluster.main, True),
         ("publish", publish_latency.main, False),
         ("foldin", foldin_latency.main, False),
     ]

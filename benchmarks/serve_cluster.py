@@ -1,0 +1,161 @@
+"""Multi-host serving tier: throughput, merge overhead, barrier freshness.
+
+    PYTHONPATH=src python benchmarks/serve_cluster.py [--smoke]
+
+Three questions about serve/cluster.py, answered per host count:
+
+* throughput — queries/sec through the full scatter/gather path
+  (per-host kernel scoring + candidate exchange + coordinator merge) as
+  n_hosts grows over a fixed catalogue. On CPU every simulated host shares
+  one device and the Pallas kernel runs in interpret mode, so this is the
+  *structural* cost of the tier (more, smaller kernel launches + the
+  merge), not a hardware scaling claim — on a real pod the per-host
+  scoring runs compiled on disjoint chips.
+
+* merge overhead — wall time of the coordinator's stable `_merge_topk`
+  over the gathered (B, sum k_eff) candidate matrix. The exchange is
+  bounded by O(hosts * topk) candidates per request row regardless of
+  catalogue size; the reported width column makes the linear growth (and
+  its small absolute cost next to scoring) visible.
+
+* publish -> all-shards-fresh — latency from a channel publish to the
+  epoch barrier committing (every host staged, coordinator flipped):
+  the cross-host analogue of benchmarks/publish_latency.py's swap clock.
+
+Writes BENCH_serve_cluster.json (self-published: keeps the host-count
+sweep as structured `scaling` records alongside the flat rows).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import csv_row, time_fn, write_bench_json
+except ModuleNotFoundError:  # invoked as a file: python benchmarks/<name>.py
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import csv_row, time_fn, write_bench_json
+
+from repro.checkpoint import as_retained_sample
+from repro.serve import ClusterCoordinator, PosteriorEnsemble, PublicationChannel
+from repro.serve.cluster import _merge_topk
+
+
+def _make_ensemble(n_users: int, n_items: int, s: int, k: int,
+                   *, base_step: int = 100) -> PosteriorEnsemble:
+    rng = np.random.default_rng(0)
+    draws = []
+    for i in range(s):
+        draws.append(as_retained_sample(base_step + i, {
+            "u": rng.normal(size=(n_users, k)).astype(np.float32),
+            "v": rng.normal(size=(n_items, k)).astype(np.float32),
+            "hyper_u_mu": np.zeros(k, np.float32),
+            "hyper_u_lam": np.eye(k, dtype=np.float32),
+            "hyper_v_mu": np.zeros(k, np.float32),
+            "hyper_v_lam": np.eye(k, dtype=np.float32),
+            "global_mean": np.float32(0.0),
+            "alpha": np.float32(2.0),
+        }))
+    return PosteriorEnsemble(tuple(draws))
+
+
+def _sample_dict(s) -> dict:
+    return {
+        "u": s.u, "v": s.v,
+        "hyper_u_mu": s.hyper_u_mu, "hyper_u_lam": s.hyper_u_lam,
+        "hyper_v_mu": s.hyper_v_mu, "hyper_v_lam": s.hyper_v_lam,
+        "global_mean": np.float32(s.global_mean),
+        "alpha": np.float32(s.alpha),
+    }
+
+
+def main(smoke: bool = False) -> list[str]:
+    n_users, n_items = (400, 4000) if smoke else (2000, 20000)
+    s, k, topk, batch = 4, 16, 10, 32
+    host_counts = (1, 2, 4) if smoke else (1, 2, 4, 8)
+    publishes = 3 if smoke else 8
+    ensemble = _make_ensemble(n_users, n_items, s, k)
+    rng = np.random.default_rng(1)
+    users = rng.integers(0, n_users, batch).astype(np.int32)
+    rows, scaling = [], []
+    print(f"# catalogue {n_items} items, ensemble S={s} k={k}, "
+          f"topk={topk}, batch={batch}")
+
+    baseline = None
+    for h in host_counts:
+        cluster = ClusterCoordinator(ensemble, n_hosts=h)
+        sec = time_fn(lambda: cluster.recommend(users, topk), iters=5)
+        qps = batch / sec
+        # the coordinator-side merge in isolation, on the same candidate
+        # widths the serve path gathered: (B, sum min(fetch, shard)) where
+        # fetch is the pow2-quantized topk
+        fetch = 1 << (topk - 1).bit_length()
+        width = sum(min(fetch, int(hi - lo)) for lo, hi in zip(
+            np.linspace(0, n_items, h + 1).astype(int)[:-1],
+            np.linspace(0, n_items, h + 1).astype(int)[1:]))
+        cand_v = jnp.asarray(rng.normal(size=(batch, width)), jnp.float32)
+        cand_i = jnp.asarray(
+            rng.integers(0, n_items, (batch, width)), jnp.int32)
+        merge_s = (time_fn(lambda: _merge_topk(cand_v, cand_i, fetch), iters=5)
+                   if h > 1 else 0.0)
+        if baseline is None:
+            baseline = sec
+        row = csv_row(
+            f"serve_cluster_h{h}", sec * 1e6,
+            f"qps={qps:,.0f} merge_us={merge_s*1e6:.0f} "
+            f"cand_width={width} vs_h1={sec/baseline:.2f}x",
+        )
+        print(row)
+        rows.append(row)
+        scaling.append({
+            "hosts": h, "qps": qps, "merge_us": merge_s * 1e6,
+            "cand_width": width, "rel_time_vs_h1": sec / baseline,
+        })
+
+    # publish -> all-shards-fresh barrier latency at the widest host count
+    h = host_counts[-1]
+    channel = PublicationChannel(window=s)
+    for d in ensemble.samples:
+        channel.publish(d.step, _sample_dict(d))
+    cluster = ClusterCoordinator(ensemble, n_hosts=h, channel=channel)
+    base = ensemble.samples[-1]
+    for i in range(publishes):
+        channel.publish(base.step + 1 + i, _sample_dict(base))
+        deadline = time.perf_counter() + 60.0
+        while cluster.epoch < base.step + 1 + i:
+            if time.perf_counter() > deadline:
+                raise TimeoutError(f"barrier stuck at epoch {cluster.epoch}")
+            time.sleep(0.001)
+    cluster.close()
+    fresh = cluster.freshness_percentiles()
+    row = csv_row(
+        f"serve_cluster_fresh_h{h}", fresh["p50"] * 1e6,
+        f"publish_to_all_shards_fresh_p50_ms={fresh['p50']*1e3:.1f} "
+        f"max_ms={fresh['max']*1e3:.1f} commits={cluster.commits}",
+    )
+    print(row)
+    rows.append(row)
+
+    write_bench_json("serve_cluster", rows, extra={
+        "scaling": scaling,
+        "merge_model": "O(hosts * topk) candidates exchanged per request row",
+        "fresh": {"p50_s": fresh["p50"], "max_s": fresh["max"],
+                  "hosts": h, "commits": cluster.commits},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

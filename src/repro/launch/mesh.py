@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
 import jax
 
 
@@ -23,6 +24,35 @@ def make_production_mesh(*, multi_pod: bool = False):
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
         )
     return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def serving_host_devices(*, mesh=None, n_hosts: int | None = None) -> list:
+    """Lead devices for the multi-host serving tier (serve/cluster.py),
+    one per shard host.
+
+    With a mesh: hosts follow the *slowest* fabric boundary — one host per
+    "pod" slice on a multi-pod mesh (the inter-pod links are where a
+    resident shard + routed U replica beat shipping score traffic), else
+    one per "data" row. Each host's lead device is the first device of its
+    slice; its V' shard and U replica are placed there.
+
+    Without a mesh: the first `n_hosts` local devices (the
+    `--xla_force_host_platform_device_count` simulation path), padded by
+    cycling when fewer exist than requested.
+    """
+    if mesh is not None:
+        axis = "pod" if "pod" in mesh.axis_names else mesh.axis_names[0]
+        k = mesh.axis_names.index(axis)
+        devs = mesh.devices
+        # one lead device per index along the host axis
+        return [
+            np.take(devs, i, axis=k).flatten()[0]
+            for i in range(devs.shape[k])
+        ]
+    devices = jax.devices()
+    if n_hosts is None:
+        n_hosts = len(devices)
+    return [devices[i % len(devices)] for i in range(n_hosts)]
 
 
 def make_host_mesh(model: int = 1):

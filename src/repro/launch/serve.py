@@ -29,10 +29,27 @@ atomically — reusing the compiled top-N kernel whenever (S, N, K) shapes
 are unchanged — while request traffic keeps flowing. Reports publish
 -> first-fresh-recommendation latency alongside the usual qps numbers.
 The same driver backs `python -m repro.launch.train --bpmf --co-serve`.
+
+Multi-host tier mode (the pod-scale scatter/gather layer, simulated):
+
+    PYTHONPATH=src python -m repro.launch.serve --bpmf --hosts 2 \
+        --requests 256 --topk 10
+
+simulates N serving hosts without hardware: the process re-execs itself
+under `XLA_FLAGS=--xla_force_host_platform_device_count=N` when fewer
+devices exist, pins one ShardHost (resident V' item shard + routed U
+replica, serve/cluster.py) per device with its own channel-subscriber
+thread, and drives traffic while a publisher thread pushes fresh epochs
+mid-stream. Verifies the tier serves top-N bit-identical to the
+single-host TopNRecommender on the same ensemble and that served epochs
+stay monotone across publishes (the all-shards-staged barrier), then
+reports qps, commit count, and publish -> all-shards-fresh latency.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import tempfile
 import time
 
@@ -186,6 +203,167 @@ def run_train_and_serve(
     return metrics
 
 
+def _ensure_host_devices(n_hosts: int) -> None:
+    """Re-exec under XLA_FLAGS=--xla_force_host_platform_device_count=N
+    when fewer devices exist than simulated hosts requested. Device count
+    is fixed once the backend initialises, so this must replace the
+    process; the guard env var prevents an exec loop when the flag cannot
+    produce enough devices (e.g. on real accelerators)."""
+    if len(jax.devices()) >= n_hosts:
+        return
+    if os.environ.get("_REPRO_SERVE_HOSTS_REEXEC") == "1":
+        raise RuntimeError(
+            f"--hosts {n_hosts} needs {n_hosts} devices but only "
+            f"{len(jax.devices())} exist even after forcing host devices"
+        )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_hosts}"
+    ).strip()
+    env["_REPRO_SERVE_HOSTS_REEXEC"] = "1"
+    os.execvpe(sys.executable,
+               [sys.executable, "-m", "repro.launch.serve", *sys.argv[1:]],
+               env)
+
+
+def run_cluster(
+    *,
+    hosts: int = 2,
+    samples: str | None = None,
+    requests: int = 256,
+    topk: int = 10,
+    max_batch: int = 8,
+    publishes: int = 4,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Drive the multi-host serving tier against live traffic + publishes.
+
+    Builds an N-host ClusterCoordinator (one simulated host per device)
+    and a single-host TopNRecommender over the same ensemble, checks the
+    tier's top-N is bit-identical, then serves `requests` warm-user batches
+    while a publisher thread pushes `publishes` fresh same-shape epochs —
+    asserting served epochs never regress (the all-shards-staged barrier).
+    Returns a metrics dict (also printed).
+    """
+    import threading
+
+    import numpy as np
+
+    from repro.checkpoint import SampleStore
+    from repro.serve import (
+        ClusterCoordinator,
+        PosteriorEnsemble,
+        PublicationChannel,
+        TopNRecommender,
+    )
+
+    root = samples
+    if root is None:
+        root = tempfile.mkdtemp(prefix="bpmf_samples_")
+        if verbose:
+            print(f"no --samples given; training a demo model into {root}")
+        train_demo_samples(root, seed=seed)
+    ensemble = PosteriorEnsemble.load(root)
+    devices = jax.devices()[:hosts]
+    if verbose:
+        print(f"cluster: {hosts} simulated hosts over {[str(d) for d in devices]}, "
+              f"ensemble S={ensemble.n_samples} {ensemble.n_users}x"
+              f"{ensemble.n_items} k={ensemble.k} epoch={ensemble.epoch}")
+
+    single = TopNRecommender(ensemble)
+    channel = PublicationChannel(window=ensemble.n_samples)
+    for s in ensemble.samples:
+        channel.publish(s.step, {
+            "u": s.u, "v": s.v,
+            "hyper_u_mu": s.hyper_u_mu, "hyper_u_lam": s.hyper_u_lam,
+            "hyper_v_mu": s.hyper_v_mu, "hyper_v_lam": s.hyper_v_lam,
+            "global_mean": np.float32(s.global_mean),
+            "alpha": np.float32(s.alpha),
+        })
+    cluster = ClusterCoordinator(ensemble, devices=devices, channel=channel)
+
+    # --- acceptance gate: the tier must match the single host bit-for-bit
+    rng = np.random.default_rng(seed)
+    probe = rng.integers(0, ensemble.n_users, max_batch).astype(np.int32)
+    v1, i1 = single.recommend(probe, topk)
+    v2, i2 = cluster.recommend(probe, topk)
+    identical = bool(np.array_equal(i1, i2) and np.array_equal(v1, v2))
+    if not identical:
+        raise AssertionError(
+            f"cluster top-N diverged from single-host: items equal="
+            f"{np.array_equal(i1, i2)} values equal={np.array_equal(v1, v2)}"
+        )
+    if verbose:
+        print(f"parity: {hosts}-host tier bit-identical to single-host "
+              f"TopNRecommender over {max_batch} probe users (topk={topk})")
+
+    # --- serve while a publisher pushes fresh epochs mid-stream
+    base = ensemble.samples[-1]
+
+    def publisher():
+        p_rng = np.random.default_rng(seed + 1)
+        for i in range(publishes):
+            time.sleep(0.05)
+            step = ensemble.epoch + 1 + i
+            channel.publish(step, {
+                "u": base.u + 0.01 * p_rng.normal(size=np.shape(base.u)).astype(np.float32),
+                "v": base.v + 0.01 * p_rng.normal(size=np.shape(base.v)).astype(np.float32),
+                "hyper_u_mu": base.hyper_u_mu, "hyper_u_lam": base.hyper_u_lam,
+                "hyper_v_mu": base.hyper_v_mu, "hyper_v_lam": base.hyper_v_lam,
+                "global_mean": np.float32(base.global_mean),
+                "alpha": np.float32(base.alpha),
+            })
+        channel.close()
+
+    pub = threading.Thread(target=publisher, name="cluster-publisher")
+    pub.start()
+    served = 0
+    epochs_seen: list[int] = []
+    t0 = time.perf_counter()
+    deadline = t0 + 300.0  # a wedged barrier must fail loudly, not hang CI
+    while True:
+        if time.perf_counter() > deadline:
+            raise TimeoutError(
+                f"cluster stuck at epoch {cluster.epoch} < {channel.epoch}"
+            )
+        drained = channel.closed and cluster.epoch >= (channel.epoch or 0)
+        users = rng.integers(0, ensemble.n_users, max_batch).astype(np.int32)
+        epoch = cluster.epoch
+        cluster.recommend(users, topk)
+        served += len(users)
+        if not epochs_seen or epoch != epochs_seen[-1]:
+            epochs_seen.append(epoch)
+        if drained and served >= requests:
+            break
+    dt = time.perf_counter() - t0
+    pub.join()
+    cluster.close()
+    assert epochs_seen == sorted(epochs_seen), (
+        f"served epochs regressed: {epochs_seen}"
+    )
+
+    fresh = cluster.freshness_percentiles()
+    metrics = {
+        "hosts": hosts,
+        "served": served,
+        "qps": served / dt,
+        "bit_identical": identical,
+        "commits": cluster.commits,
+        "epochs_served": len(epochs_seen),
+        "fresh_p50_ms": fresh["p50"] * 1e3,
+        "fresh_max_ms": fresh["max"] * 1e3,
+    }
+    if verbose:
+        print(f"served {served} requests in {dt:.2f}s -> {metrics['qps']:,.0f} qps "
+              f"across {len(epochs_seen)} monotone epochs "
+              f"({cluster.commits} barrier commits)")
+        print(f"publish -> all-shards-fresh p50 {metrics['fresh_p50_ms']:.1f} ms  "
+              f"max {metrics['fresh_max_ms']:.1f} ms")
+    return metrics
+
+
 def bpmf_main(args) -> None:
     from repro.launch.mesh import make_host_mesh
     from repro.serve import RecommendFrontend
@@ -251,12 +429,26 @@ def main():
     ap.add_argument("--co-train", action="store_true",
                     help="train and serve in one process; retained draws are "
                          "pushed to the live frontend (no disk poll)")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="serve through the multi-host tier with N simulated "
+                         "hosts (re-execs under "
+                         "--xla_force_host_platform_device_count when needed)")
+    ap.add_argument("--publishes", type=int, default=4,
+                    help="--hosts mode: fresh epochs pushed mid-stream")
     ap.add_argument("--sweeps", type=int, default=60,
                     help="co-train: total Gibbs sweeps")
     ap.add_argument("--keep", type=int, default=4,
                     help="co-train: publication window / ensemble size")
     args = ap.parse_args()
 
+    if args.bpmf and args.hosts > 0:
+        _ensure_host_devices(args.hosts)
+        run_cluster(
+            hosts=args.hosts, samples=args.samples, requests=args.requests,
+            topk=args.topk, max_batch=min(args.max_batch, 8),
+            publishes=args.publishes,
+        )
+        return
     if args.bpmf:
         bpmf_main(args)
         return

@@ -6,8 +6,13 @@ SampleStore; this package turns them into a service:
 
   ensemble.py   PosteriorEnsemble — stacked (U_s, V_s, hyper_s) draws,
                 posterior-mean scores + predictive variance per (user, item)
+  cluster.py    the multi-host serving tier — ShardHost (resident V' item
+                shard + routed U replica) and ClusterCoordinator (bounded
+                O(hosts * topk) candidate gather/merge, channel fan-out,
+                all-shards-staged epoch barrier)
   topn.py       TopNRecommender — batched top-N over the catalogue, backed
-                by the Pallas streaming top-k kernel (kernels/bpmf_topn.py)
+                by the Pallas streaming top-k kernel (kernels/bpmf_topn.py);
+                the single-host special case of the cluster tier
   foldin.py     cold-start fold-in — batched (S*B) conditional posteriors
                 for users unseen at train time, from their ratings alone;
                 FoldInPlanCache keeps the solve shapes (and compiled
@@ -18,6 +23,7 @@ SampleStore; this package turns them into a service:
                 cache keyed by sample epoch, sharded over launch/mesh.py,
                 refreshed by channel subscription (push) or store poll
 """
+from repro.serve.cluster import ClusterCoordinator, ShardHost
 from repro.serve.ensemble import PosteriorEnsemble
 from repro.serve.foldin import FoldInPlanCache, fold_in, fold_in_loop
 from repro.serve.frontend import RecommendFrontend, RecommendResult
@@ -26,7 +32,9 @@ from repro.serve.topn import SeenIndex, TopNRecommender
 
 __all__ = [
     "ChannelSnapshot",
+    "ClusterCoordinator",
     "FoldInPlanCache",
+    "ShardHost",
     "PosteriorEnsemble",
     "PublicationChannel",
     "fold_in",

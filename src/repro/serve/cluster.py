@@ -1,0 +1,529 @@
+"""Multi-host top-N serving tier: scatter/gather over resident item shards.
+
+The single-host recommender (serve/topn.py) stops scaling at one host's
+HBM: V' for the full catalogue must fit beside the U table. This module is
+the pod-scale tier ROADMAP names — the same decomposition "A
+High-Performance Implementation of Bayesian Matrix Factorization with
+Limited Communication" (Vander Aa et al., 2020) uses for BMF at scale:
+
+* Each **ShardHost** owns a *resident* row-range of V' (its item shard)
+  plus a *routed replica* of the U scoring table, so a warm-user request
+  ships only user ids to every host — each host gathers the rows from its
+  own replica and streams its shard through the `bpmf_topn` kernel.
+  Cold-start rows (fold-in factors, computed once at the coordinator) are
+  scattered to the hosts instead.
+
+* The **ClusterCoordinator** gathers the per-host candidate lists — each
+  `(B, min(fetch, shard_rows))`, so the exchange is bounded by
+  O(hosts * fetch) values + indices regardless of catalogue size — and
+  merges them with the same stable `_merge_topk` the kernel applies across
+  item tiles: shards hold disjoint ascending index ranges and are
+  concatenated in range order, so ties still resolve to the lowest global
+  item index, bit-for-bit what one unsharded `lax.top_k` would pick.
+
+* Freshness rides the PublicationChannel's subscriber list (serve/publish):
+  `attach()` fans each publish out to one subscriber loop per host — the
+  in-process stand-in for the per-process subscriber on a real pod. Each
+  host *stages* its successor binding (a zero-retrace rebind: same shapes,
+  same compiled executables), and the coordinator *commits* an epoch only
+  once every host has staged it — the epoch-monotonicity discipline from
+  the single-host swap, now cross-host: a request can never score shard 0
+  against epoch E and shard 1 against E-1 (no torn cross-shard ensembles).
+  A host that falls behind simply makes the cluster serve the previous
+  epoch a little longer; epochs it skipped are never served.
+
+`TopNRecommender` is the single-host special case of this tier: it
+subclasses the coordinator with all shards colocated in-process, so the
+shard assignment, fetch quantization, exclusion filtering, and merge
+contract exist exactly once.
+
+Runnable without hardware: `launch/serve.py --hosts N` simulates N hosts
+via `XLA_FLAGS=--xla_force_host_platform_device_count`, one simulated host
+per device with its own subscriber thread.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.serve.ensemble import PosteriorEnsemble
+from repro.serve.publish import ChannelSnapshot, PublicationChannel
+
+
+def shard_bounds(n_items: int, n_shards: int) -> np.ndarray:
+    """Item-axis shard assignment shared by every tier layout: n_shards+1
+    ascending bounds, balanced to within one row. The single-host
+    recommender and the cluster use the same bounds, so their per-shard
+    kernel shapes (and jit cache entries) coincide."""
+    return np.linspace(0, n_items, n_shards + 1).astype(int)
+
+
+def _merge_topk(vals: jax.Array, idx: jax.Array, topk: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard candidates (B, C) keeping lax.top_k's stable order.
+
+    Shards hold disjoint, ascending index ranges and are concatenated in
+    range order, so position-stable top_k again resolves ties to the lowest
+    global item index.
+    """
+    v, pos = jax.lax.top_k(vals, topk)
+    return v, jnp.take_along_axis(idx, pos, axis=1)
+
+
+class _Binding(NamedTuple):
+    """One host's immutable serving state for one epoch. Requests capture a
+    binding snapshot under the coordinator lock and score entirely against
+    it — commits and reshards replace bindings, never mutate them."""
+
+    ensemble: PosteriorEnsemble
+    u_replica: jax.Array   # (M, S*K) routed replica of the U scoring table
+    v_shard: jax.Array     # (hi-lo, S*K) resident item shard
+    lo: int                # global index of the shard's first item
+    hi: int
+
+
+class ShardHost:
+    """One serving host: device placement + the live/staged binding pair.
+
+    `stage()` builds the successor binding off the serving path (the
+    expensive part: slicing V' and placing both tables on the host's
+    device); the coordinator performs the cheap barrier-side flip under
+    its lock once *all* hosts have staged the same epoch.
+
+    routed=False is the colocated (single-host recommender) layout: hosts
+    share one coordinator-side U table instead of each holding a routed
+    device replica, and the coordinator gathers scoring rows once — the
+    tier's replica memory cost is only paid where hosts are real.
+    """
+
+    def __init__(self, host_id: int, ensemble: PosteriorEnsemble,
+                 lo: int, hi: int, *, device=None, interpret: bool | None = None,
+                 routed: bool = True, flats=None):
+        self.host_id = host_id
+        self.device = device
+        self.interpret = interpret
+        self.routed = routed
+        self.live = self.build(ensemble, lo, hi, flats=flats)
+        self.staged: _Binding | None = None
+
+    def build(self, ensemble: PosteriorEnsemble, lo: int, hi: int,
+              *, flats=None) -> _Binding:
+        """Materialise a binding: resident V' rows [lo, hi) + the U table,
+        device-placed when this host has a pinned device. `flats` shares
+        one scoring_matrices() result across hosts (construction/reshard —
+        colocated hosts then alias a single U array); staging computes its
+        own, modelling per-host independence on a real pod."""
+        u_flat, v_flat = flats if flats is not None else ensemble.scoring_matrices()
+        chunk = v_flat[lo:hi]
+        if self.device is not None:
+            chunk = jax.device_put(chunk, self.device)
+            if self.routed:
+                u_flat = jax.device_put(u_flat, self.device)
+        return _Binding(ensemble, u_flat, chunk, int(lo), int(hi))
+
+    def stage(self, ensemble: PosteriorEnsemble) -> _Binding:
+        """Build (but do not serve) the successor for a same-shape publish.
+        Same bounds + same shapes -> every kernel invocation lands on the
+        jit cache entries the live binding already compiled (zero retrace).
+        """
+        live = self.live  # snapshot: a concurrent reshard swaps the attr
+        if ensemble.shape_key() != live.ensemble.shape_key():
+            raise ValueError(
+                f"shape changed: {ensemble.shape_key()} vs "
+                f"{live.ensemble.shape_key()} — reshard, don't stage"
+            )
+        return self.build(ensemble, live.lo, live.hi)
+
+    def candidates(self, binding: _Binding, fetch: int, *,
+                   rows: jax.Array | None = None,
+                   user_ids: np.ndarray | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+        """This host's (B, k_eff) candidate list against `binding`'s shard.
+
+        Warm requests route user ids and gather from the local U replica;
+        cold/fold-in requests scatter precomputed scoring rows instead.
+        k_eff < fetch on a shard smaller than the fetch width (the ragged
+        final shard) — the merge pads nothing, it just sees fewer columns.
+        """
+        if rows is None:
+            rows = binding.u_replica[user_ids]
+        k_eff = min(fetch, binding.hi - binding.lo)
+        vals, idx = ops.topn_scores(rows, binding.v_shard, k_eff,
+                                    interpret=self.interpret)
+        return vals, idx + np.int32(binding.lo)
+
+
+class ClusterCoordinator:
+    """Scatter/gather top-N over ShardHosts, with cross-host epoch barrier.
+
+    The serving API matches TopNRecommender exactly (`recommend`,
+    `recommend_rows`, `recommend_factors`, `rebind`) — the frontend and the
+    launchers treat the two interchangeably; TopNRecommender *is* this
+    class with every host colocated.
+
+    `attach(channel)` subscribes one loop per host to a PublicationChannel:
+    publishes fan out to all hosts, each stages its shard independently,
+    and `epoch` advances only when the staging barrier clears.
+    """
+
+    # the tier routes user ids and each host gathers from its own U
+    # replica; TopNRecommender overrides this to False — colocated shards
+    # share one U table and the coordinator gathers rows once
+    routed = True
+
+    def __init__(
+        self,
+        ensemble: PosteriorEnsemble,
+        *,
+        n_hosts: int = 1,
+        devices=None,
+        mesh=None,
+        interpret: bool | None = None,
+        channel: PublicationChannel | None = None,
+        max_samples: int | None = None,
+    ):
+        if mesh is not None and devices is None:
+            from repro.launch.mesh import serving_host_devices
+            devices = serving_host_devices(mesh=mesh)
+        if devices is not None:
+            n_hosts = len(devices)
+        self.interpret = interpret
+        self.devices = devices
+        self.max_samples = max_samples
+        n_hosts = max(1, min(n_hosts, ensemble.n_items))
+        bounds = shard_bounds(ensemble.n_items, n_hosts)
+        flats = ensemble.scoring_matrices()  # one U/V' build shared by all
+        self.hosts = [
+            ShardHost(
+                i, ensemble, bounds[i], bounds[i + 1],
+                device=(devices[i % len(devices)] if devices is not None else None),
+                interpret=interpret, routed=self.routed, flats=flats,
+            )
+            for i in range(n_hosts)
+        ]
+        # candidates from hosts pinned to distinct devices need an explicit
+        # device->host gather before the merge; colocated shards merge on
+        # device with no round trip
+        self._multi_device = devices is not None and len(set(devices)) > 1
+        self.ensemble = ensemble
+        self._epoch = ensemble.epoch
+        self._lock = threading.Lock()
+        self._build_lock = threading.Lock()
+        self._pending: tuple[int, PosteriorEnsemble] | None = None  # (seq, ens)
+        # barrier-path stats: committed epochs, coordinated reshards, and
+        # publish -> all-shards-fresh latency (the cross-host freshness clock)
+        self.commits = 0
+        self.reshards = 0
+        self.publish_to_fresh_s: collections.deque[float] = collections.deque(maxlen=4096)
+        self.channel: PublicationChannel | None = None
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        if channel is not None:
+            self.attach(channel)
+
+    # -- layout ---------------------------------------------------------
+    @property
+    def n_hosts(self) -> int:
+        return len(self.hosts)
+
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def _layout_kwargs(self) -> dict:
+        return dict(n_hosts=self.n_hosts, devices=self.devices,
+                    interpret=self.interpret, max_samples=self.max_samples)
+
+    def rebind(self, ensemble: PosteriorEnsemble):
+        """A new coordinator serving `ensemble` through this one's compiled
+        executables: same shard bounds, same device placement, and — because
+        every jit in the scoring path keys on shapes this layout pins — zero
+        retraces of the top-N kernel (kernels.bpmf_topn.trace_count is flat
+        across a rebind; tested). The publish hot path: a same-shape sample
+        publication costs one V' re-shard + buffer swap, not a recompile.
+
+        Self is left untouched and fully servable — callers swap the
+        returned instance in atomically (RecommendFrontend holds requests'
+        view stable by capturing the old instance under its lock).
+
+        Raises ValueError when the ensemble's (S, M, N, K) changed; the
+        caller falls back to a full rebuild (which will retrace).
+        """
+        if ensemble.shape_key() != self.ensemble.shape_key():
+            raise ValueError(
+                f"shape changed: {ensemble.shape_key()} vs "
+                f"{self.ensemble.shape_key()} — rebuild, don't rebind"
+            )
+        return type(self)(ensemble, **self._layout_kwargs())
+
+    # -- serving (scatter/gather) ---------------------------------------
+    def _snapshot(self) -> tuple[int, PosteriorEnsemble, list[_Binding]]:
+        """Atomic view for one request: epoch + every host's live binding.
+        A commit or reshard that lands mid-request replaces bindings but
+        never mutates these — the request finishes on one epoch."""
+        with self._lock:
+            return self._epoch, self.ensemble, [h.live for h in self.hosts]
+
+    def _gather_merge(self, bindings: list[_Binding], fetch: int, *,
+                      rows=None, user_ids=None) -> tuple[jax.Array, jax.Array]:
+        vals, idx = [], []
+        for host, binding in zip(self.hosts, bindings):
+            v, i = host.candidates(binding, fetch, rows=rows, user_ids=user_ids)
+            vals.append(v)
+            idx.append(i)
+        if len(vals) == 1:
+            return vals[0], idx[0]
+        if self._multi_device:
+            # the cross-host exchange: each host ships only its (B, k_eff)
+            # candidate list to the coordinator — O(hosts * fetch) values +
+            # indices regardless of catalogue size. device_get is the
+            # explicit gather (candidates live on per-host devices); the
+            # merge itself runs at the coordinator.
+            vals = np.concatenate([np.asarray(v) for v in vals], axis=1)
+            idx = np.concatenate([np.asarray(i) for i in idx], axis=1)
+            return _merge_topk(jnp.asarray(vals), jnp.asarray(idx), fetch)
+        # colocated shards: merge on device, no host round trip
+        return _merge_topk(jnp.concatenate(vals, 1), jnp.concatenate(idx, 1),
+                           fetch)
+
+    def _topk_rows(self, rows: jax.Array, topk: int
+                   ) -> tuple[jax.Array, jax.Array]:
+        """Kernel top-k of rows @ V'^T across all item shards."""
+        _, ens, bindings = self._snapshot()
+        return self._gather_merge(bindings, min(topk, ens.n_items), rows=rows)
+
+    def _serve(self, topk: int, *, rows=None, user_ids=None,
+               exclude: list[np.ndarray] | None = None,
+               fetch_hint: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        _, ens, bindings = self._snapshot()
+        if user_ids is not None and not self.routed:
+            # colocated layout: one coordinator-side gather from the shared
+            # U table instead of a per-host replica gather
+            rows = bindings[0].u_replica[np.asarray(user_ids, np.int32)]
+            user_ids = None
+        b = rows.shape[0] if rows is not None else len(user_ids)
+        fetch = topk
+        if exclude is not None:
+            assert len(exclude) == b, (len(exclude), b)
+            fetch = topk + max((len(e) for e in exclude), default=0)
+        if fetch_hint is not None:
+            # honored with or without exclusions: a hint pins the kernel
+            # shape even for exclusion-free (e.g. cold-start) batches, whose
+            # drifting topk would otherwise thrash the jit cache
+            fetch = max(fetch, fetch_hint)
+        # round up to a power of two unconditionally: every serving caller
+        # (with exclusions, with a hint, or bare) folds onto O(log n_items)
+        # kernel shapes instead of one compile per distinct topk
+        fetch = 1 << (fetch - 1).bit_length()
+        fetch = min(fetch, ens.n_items)
+        vals, idx = self._gather_merge(bindings, fetch, rows=rows,
+                                       user_ids=user_ids)
+        vals = np.asarray(vals) + ens.global_mean
+        idx = np.asarray(idx)
+        if exclude is None:
+            return vals[:, :topk], idx[:, :topk]
+        out_v = np.full((b, topk), -np.inf, np.float32)
+        out_i = np.full((b, topk), -1, np.int32)
+        for r in range(b):
+            keep = ~np.isin(idx[r], exclude[r])
+            kept_v, kept_i = vals[r][keep][:topk], idx[r][keep][:topk]
+            out_v[r, : len(kept_v)] = kept_v
+            out_i[r, : len(kept_i)] = kept_i
+        return out_v, out_i
+
+    def recommend_rows(
+        self,
+        rows: jax.Array,
+        topk: int,
+        *,
+        exclude: list[np.ndarray] | None = None,
+        fetch_hint: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for explicit scoring rows (B, S*K), scattered to every host.
+
+        exclude: optional per-row arrays of item ids to drop (seen items).
+        fetch_hint: a batch-independent upper bound on topk + exclusions
+        (e.g. topk + SeenIndex.max_degree) — pins the candidate count so the
+        serving hot path compiles exactly one kernel shape per topk.
+        Returns host arrays (values (B, topk), indices (B, topk)); rows with
+        fewer than topk candidates left are padded with (-inf, -1).
+        """
+        return self._serve(topk, rows=rows, exclude=exclude,
+                           fetch_hint=fetch_hint)
+
+    def recommend(
+        self,
+        user_ids: np.ndarray,
+        topk: int,
+        *,
+        seen=None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for trained users: only the ids are routed — each host
+        gathers the scoring rows from its own U replica. `seen` excludes
+        each user's already-rated items; pass a prebuilt SeenIndex on the
+        serving hot path (a raw SparseRatings is indexed from scratch on
+        every call)."""
+        from repro.serve.topn import SeenIndex  # lazy: topn subclasses us
+
+        user_ids = np.asarray(user_ids, np.int32)
+        exclude = None
+        fetch_hint = None
+        if seen is not None:
+            if not isinstance(seen, SeenIndex):
+                seen = SeenIndex(seen)
+            exclude = [seen[int(u)] for u in user_ids]
+            fetch_hint = topk + seen.max_degree
+        return self._serve(topk, user_ids=user_ids, exclude=exclude,
+                           fetch_hint=fetch_hint)
+
+    def recommend_factors(
+        self,
+        u_draws: jax.Array,
+        topk: int,
+        *,
+        exclude: list[np.ndarray] | None = None,
+        fetch_hint: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-N for fold-in users given their per-draw factors (S, B, K).
+
+        fetch_hint pins the candidate count across cold batches (the
+        frontend passes topk + batch max degree, power-of-two quantized) so
+        varying per-batch rated counts reuse one compiled kernel shape."""
+        _, ens, _ = self._snapshot()
+        rows = ens.user_scoring_rows(u_draws)
+        return self._serve(topk, rows=rows, exclude=exclude,
+                           fetch_hint=fetch_hint)
+
+    # -- freshness: channel fan-out + all-shards-staged barrier ----------
+    def attach(self, channel: PublicationChannel) -> None:
+        """Fan the channel's publishes out to every host: one subscriber
+        loop per host (the in-process stand-in for a per-process subscriber
+        on a real pod), each staging its own shard as publishes land."""
+        if self.channel is not None:
+            raise RuntimeError("already attached to a channel")
+        self.channel = channel
+        self._threads = [
+            threading.Thread(
+                target=self._host_loop, args=(host,),
+                name=f"shard-host-{host.host_id}", daemon=True,
+            )
+            for host in self.hosts
+        ]
+        for t in self._threads:
+            t.start()
+
+    def close(self) -> None:
+        """Stop the per-host subscriber loops (the channel stays usable)."""
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+
+    def _host_loop(self, host: ShardHost) -> None:
+        last_staged = self._epoch
+        while not self._stop.is_set():
+            snap = self.channel.wait(newer_than=last_staged, timeout=0.25)
+            if snap is None:
+                if self.channel.closed:
+                    # drain: a final publish can land between a timed-out
+                    # wait and the closed check (same discipline as the
+                    # frontend's subscriber loop)
+                    final = self.channel.snapshot()
+                    if final is not None and final.epoch > last_staged:
+                        self._adopt(host, final)
+                    return
+                continue
+            last_staged = max(last_staged, snap.epoch)
+            self._adopt(host, snap)
+
+    def _ensemble_for(self, snap: ChannelSnapshot) -> PosteriorEnsemble:
+        """Stack the snapshot's draw window once per publish; host loops
+        share the decoded ensemble, then do their own (per-device) staging
+        work outside any lock."""
+        with self._build_lock:
+            if self._pending is not None and self._pending[0] == snap.seq:
+                return self._pending[1]
+            draws = snap.draws
+            if self.max_samples is not None:
+                draws = draws[-self.max_samples:]
+            ensemble = PosteriorEnsemble(draws)
+            self._pending = (snap.seq, ensemble)
+            return ensemble
+
+    def _adopt(self, host: ShardHost, snap: ChannelSnapshot) -> None:
+        ensemble = self._ensemble_for(snap)
+        if ensemble.shape_key() != self.ensemble.shape_key():
+            self._reshard(ensemble)
+            return
+        try:
+            binding = host.stage(ensemble)  # heavy part: off the coordinator lock
+        except ValueError:
+            # raced a reshard: another host's thread changed the live
+            # shapes between our shape check and staging. Re-run as a
+            # reshard — _reshard re-checks epoch and shape under the lock,
+            # so a reshard that already superseded this publish is a no-op
+            # (and the host loop survives either way: an unhandled raise
+            # here would kill this host's thread and wedge the barrier).
+            self._reshard(ensemble)
+            return
+        with self._lock:
+            if ensemble.epoch <= self._epoch:
+                return  # lost the race to a newer commit / reshard
+            host.staged = binding
+            self._commit_locked(snap.t_publish)
+
+    def _commit_locked(self, t_publish: float | None) -> bool:
+        """Flip every host to its staged binding iff ALL hosts have staged
+        the same strictly-newer epoch — the no-torn-cross-shard barrier.
+        Caller holds self._lock."""
+        staged = [h.staged for h in self.hosts]
+        if any(s is None for s in staged):
+            return False
+        epochs = {s.ensemble.epoch for s in staged}
+        if len(epochs) != 1:
+            return False  # hosts mid-flight on different publishes
+        (epoch,) = epochs
+        if epoch <= self._epoch:
+            return False
+        for h in self.hosts:
+            h.live, h.staged = h.staged, None
+        self._epoch = epoch
+        self.ensemble = staged[0].ensemble
+        self.commits += 1
+        if t_publish is not None:
+            self.publish_to_fresh_s.append(time.perf_counter() - t_publish)
+        return True
+
+    def _reshard(self, ensemble: PosteriorEnsemble) -> None:
+        """Coordinated shape-change adoption: new shard bounds, every host
+        rebuilt in one critical section (on a real pod this is a resharding
+        deployment, not a rolling rebind). First host thread to see the new
+        shape does the work; the rest observe the advanced epoch and skip.
+        In-flight requests hold the old bindings and finish untorn."""
+        with self._lock:
+            if ensemble.epoch <= self._epoch:
+                return
+            bounds = shard_bounds(ensemble.n_items, self.n_hosts)
+            flats = ensemble.scoring_matrices()
+            for i, h in enumerate(self.hosts):
+                h.live = h.build(ensemble, bounds[i], bounds[i + 1], flats=flats)
+                h.staged = None
+            self._epoch = ensemble.epoch
+            self.ensemble = ensemble
+            self.reshards += 1
+
+    # -- observability ---------------------------------------------------
+    def freshness_percentiles(self) -> dict[str, float]:
+        """p50/max publish -> all-shards-fresh latency (seconds)."""
+        if not self.publish_to_fresh_s:
+            return {"p50": float("nan"), "max": float("nan")}
+        lat = np.asarray(self.publish_to_fresh_s)
+        return {"p50": float(np.percentile(lat, 50)), "max": float(lat.max())}

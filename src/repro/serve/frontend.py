@@ -42,6 +42,7 @@ import jax
 
 from repro.checkpoint.samples import SampleStore
 from repro.data.sparse import SparseRatings
+from repro.serve.cluster import ClusterCoordinator
 from repro.serve.ensemble import PosteriorEnsemble
 from repro.serve.foldin import FoldInPlanCache, fold_in
 from repro.serve.publish import ChannelSnapshot, PublicationChannel
@@ -80,11 +81,15 @@ class RecommendFrontend:
         max_samples: int | None = None,
         devices=None,
         mesh=None,
+        n_hosts: int | None = None,
         interpret: bool | None = None,
     ):
         """seen: training ratings used to exclude already-rated items.
         devices / mesh: where to shard the item factors — a mesh contributes
         its "data"-axis devices (launch/mesh.py), default all local devices.
+        n_hosts: serve through the multi-host tier (serve/cluster.py) with
+        this many shard hosts — one per device when enough exist — instead
+        of the colocated single-host recommender.
 
         channel: a PublicationChannel a co-running trainer publishes into;
         with subscribe=True (default) a daemon thread adopts each publish as
@@ -103,6 +108,7 @@ class RecommendFrontend:
         if mesh is not None and devices is None:
             devices = list(mesh.devices.flatten())
         self.devices = devices if devices is not None else jax.devices()
+        self.n_hosts = n_hosts
         self.interpret = interpret
         self._lock = threading.Lock()
         self._adopt_lock = threading.Lock()  # one ensemble build at a time
@@ -120,6 +126,10 @@ class RecommendFrontend:
         self.swaps = 0
         self.rebinds = 0  # swaps that reused the compiled executables
         self.publish_to_swap_s: collections.deque[float] = collections.deque(maxlen=4096)
+        # publishes the subscriber rejected (e.g. an ensemble smaller than
+        # the seen-item index) — kept so a rejection is observable without
+        # killing the subscriber thread
+        self.adopt_errors: collections.deque[Exception] = collections.deque(maxlen=64)
         self._subscriber: threading.Thread | None = None
         self._stop = threading.Event()
 
@@ -235,13 +245,9 @@ class RecommendFrontend:
                     # Same-shape rebinds keep every cache entry — a publish
                     # must not cost the cold path its compiled solves.
                     self.foldin_cache.clear()
-                    recommender = TopNRecommender(
-                        ensemble, devices=self.devices, interpret=self.interpret
-                    )
+                    recommender = self._build_recommender(ensemble)
             else:
-                recommender = TopNRecommender(
-                    ensemble, devices=self.devices, interpret=self.interpret
-                )
+                recommender = self._build_recommender(ensemble)
             with self._lock:
                 self._epoch = ensemble.epoch
                 self._recommender = recommender
@@ -251,11 +257,58 @@ class RecommendFrontend:
                     self.publish_to_swap_s.append(time.perf_counter() - t_publish)
         return True
 
+    def _build_recommender(self, ensemble: PosteriorEnsemble):
+        """Fresh recommender for `ensemble` (boot, or a shape-changing
+        swap). Resyncs the seen-item index first: an exclusion index built
+        against the boot-time ratings silently under-excludes once the
+        user/item axes grow, so a mismatched shape rebuilds it padded to
+        the ensemble's axes (new users/items get empty exclusion rows) and
+        an ensemble *smaller* than the ratings is rejected outright."""
+        if self.seen is not None:
+            want = (ensemble.n_users, ensemble.n_items)
+            if self.seen.shape != want:
+                self.seen = self.seen.resized(want)  # ValueError on shrink
+        if self.n_hosts is not None:
+            devices = None
+            if self.devices is not None and len(self.devices) >= self.n_hosts:
+                devices = list(self.devices)[: self.n_hosts]
+            return ClusterCoordinator(
+                ensemble, n_hosts=self.n_hosts, devices=devices,
+                interpret=self.interpret,
+            )
+        return TopNRecommender(
+            ensemble, devices=self.devices, interpret=self.interpret
+        )
+
     def _subscriber_loop(self) -> None:
         """Daemon: sleep on the channel, adopt each newer snapshot on
-        arrival — the push path; serving threads never wait on a rebuild."""
+        arrival — the push path; serving threads never wait on a rebuild.
+
+        A publish whose adoption is *rejected* (ValueError — e.g. an
+        ensemble shrunk below the seen-item index) is recorded in
+        `adopt_errors` and skipped: the loop keeps serving the current
+        epoch and stays alive for future publishes, rather than dying and
+        silently freezing the served epoch forever.
+        """
+        rejected: int | None = None  # newest rejected epoch; skip until newer
+
+        def adopt(snap) -> None:
+            nonlocal rejected
+            try:
+                self._adopt_snapshot(snap)
+            except ValueError as e:
+                self.adopt_errors.append(e)
+                rejected = snap.epoch
+
         while not self._stop.is_set():
-            snap = self.channel.wait(newer_than=self._epoch, timeout=0.25)
+            with self._lock:
+                # locked read: _swap writes _epoch under this lock, and an
+                # unlocked read here could see a torn/stale value while a
+                # swap is mid-publish (the hammer test in tests/test_publish
+                # drives this race)
+                epoch = self._epoch
+            floor = epoch if rejected is None else max(epoch, rejected)
+            snap = self.channel.wait(newer_than=floor, timeout=0.25)
             if snap is None:
                 if self.channel.closed:
                     # a final publish can land between our timed-out wait()
@@ -263,11 +316,11 @@ class RecommendFrontend:
                     # last epoch would never be adopted (co-train drain loops
                     # block on fe.epoch catching up to channel.epoch)
                     final = self.channel.snapshot()
-                    if final is not None:
-                        self._adopt_snapshot(final)
+                    if final is not None and final.epoch > floor:
+                        adopt(final)
                     return
                 continue  # timeout heartbeat: re-check _stop
-            self._adopt_snapshot(snap)
+            adopt(snap)
 
     def close(self) -> None:
         """Stop the subscriber thread (the channel itself stays usable)."""

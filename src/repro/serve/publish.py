@@ -24,10 +24,12 @@ arrive out of order (a straggler draw lands in the window but cannot move
 the epoch backwards; a duplicate step is dropped). Subscribers that adopt
 only strictly-newer epochs therefore never regress.
 
-The channel is the seam where ROADMAP's multi-host serving tier later plugs
-in: a pod-scale deployment replaces the in-process subscriber list with a
-scatter/gather fan-out over the serving mesh, and nothing above or below
-this interface changes.
+The channel is also the seam the multi-host serving tier plugs into
+(serve/cluster.py): `ClusterCoordinator.attach` subscribes one loop *per
+shard host*, fanning every publish out across the serving mesh, and each
+host stages its own V' shard rebind. Nothing below this interface changed
+when that tier landed — single-host frontends and the pod-scale
+coordinator consume the exact same snapshots.
 """
 from __future__ import annotations
 

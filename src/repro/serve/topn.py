@@ -1,20 +1,22 @@
-"""Batched top-N recommendation over the full item catalogue.
+"""Batched top-N recommendation over the full item catalogue — the
+single-host special case of the multi-host tier (serve/cluster.py).
 
-Wraps the Pallas streaming top-k kernel (kernels/bpmf_topn.py) around the
-ensemble's flattened scoring matrices. Two serving concerns live here:
+All the serving mechanics live in the tier: shard assignment
+(`cluster.shard_bounds`), per-shard kernel scoring through
+`kernels/bpmf_topn.py`, stable candidate merging (`cluster._merge_topk` —
+re-exported here), power-of-two fetch quantization, and host-side
+seen-item exclusion. `TopNRecommender` is a `ClusterCoordinator` whose
+"hosts" are all colocated in this process (one per local device when a
+device list / mesh is given, mirroring launch/mesh.py's "data" axis) — so
+there is exactly one implementation of the merge contract, and the
+single-host and pod-scale paths are bit-identical by construction.
+
+Serving concerns kept from the original module:
 
 * Seen-item exclusion. Users should not be recommended items they already
   rated. Rated sets are tiny next to the catalogue, so the kernel fetches
   topk + max(batch rated counts) candidates and the host drops the seen ones
   — cheaper than materialising a (B, N) mask the kernel would have to read.
-
-* Item sharding. V' is split row-wise into `n_shards` chunks (one per mesh
-  device when a mesh is given, mirroring launch/mesh.py's "data" axis). Each
-  shard streams its chunk through the kernel independently; the per-shard
-  candidate lists (values + global indices) are merged with one more stable
-  top-k, the same merge the kernel itself applies across item tiles. On a
-  real slice each shard's kernel runs on its own device against its resident
-  chunk — scoring scales with devices while the merge stays O(shards * topk).
 
 * Executable reuse across publishes. A co-running trainer replaces the
   ensemble many times over a server's life, almost always at unchanged
@@ -27,41 +29,65 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.data.sparse import SparseRatings, csr_from_coo
-from repro.kernels import ops
+from repro.serve.cluster import ClusterCoordinator, _merge_topk, shard_bounds
 from repro.serve.ensemble import PosteriorEnsemble
+
+__all__ = ["SeenIndex", "TopNRecommender", "_merge_topk", "shard_bounds"]
 
 
 class SeenIndex:
     """One-time CSR index over the training matrix: O(degree) lookup of a
     user's rated items, vs the O(nnz) boolean scan a COO filter would cost
-    on every request batch."""
+    on every request batch.
 
-    def __init__(self, ratings: SparseRatings):
+    `shape` is the (n_users, n_items) the index is valid for. It may be
+    built *larger* than the ratings matrix (users/items the boot-time
+    ratings never saw get empty exclusion rows) — the frontend uses
+    `resized()` to follow an ensemble whose axes grew across a publish.
+    Building it smaller than the ratings is rejected: an index that silently
+    dropped known ratings would under-exclude.
+    """
+
+    def __init__(self, ratings: SparseRatings, *,
+                 shape: tuple[int, int] | None = None):
+        self.ratings = ratings
+        self.shape = tuple(ratings.shape) if shape is None else tuple(shape)
+        if self.shape[0] < ratings.shape[0] or self.shape[1] < ratings.shape[1]:
+            raise ValueError(
+                f"seen-index shape {self.shape} cannot shrink below the "
+                f"ratings matrix {tuple(ratings.shape)} — it would silently "
+                "under-exclude"
+            )
         self.indptr, self.cols, _ = csr_from_coo(
-            ratings.rows, ratings.cols, ratings.vals, ratings.shape[0]
+            ratings.rows, ratings.cols, ratings.vals, self.shape[0]
         )
         self.max_degree = int(np.diff(self.indptr).max(initial=0))
+
+    def resized(self, shape: tuple[int, int]) -> "SeenIndex":
+        """The same ratings re-indexed for a grown (n_users, n_items) —
+        raises ValueError when `shape` is smaller than the ratings."""
+        return SeenIndex(self.ratings, shape=shape)
 
     def __getitem__(self, user: int) -> np.ndarray:
         return self.cols[self.indptr[user]: self.indptr[user + 1]]
 
 
-def _merge_topk(vals: jax.Array, idx: jax.Array, topk: int
-                ) -> tuple[jax.Array, jax.Array]:
-    """Merge per-shard candidates (B, C) keeping lax.top_k's stable order.
+class TopNRecommender(ClusterCoordinator):
+    """Single-host top-N: every item shard colocated in this process.
 
-    Shards hold disjoint, ascending index ranges and are concatenated in
-    range order, so position-stable top_k again resolves ties to the lowest
-    global item index.
+    The serving API (`recommend`, `recommend_rows`, `recommend_factors`,
+    `rebind`) is the coordinator's; this class only maps the historical
+    `n_shards=` spelling onto the tier's host axis and keeps the flat-array
+    accessors callers grew around the original implementation.
     """
-    v, pos = jax.lax.top_k(vals, topk)
-    return v, jnp.take_along_axis(idx, pos, axis=1)
 
+    # colocated shards share one U table and the coordinator gathers
+    # scoring rows once — no per-device replicas of a table that can be
+    # millions of rows (the tier pays that only for real hosts)
+    routed = False
 
-class TopNRecommender:
     def __init__(
         self,
         ensemble: PosteriorEnsemble,
@@ -70,155 +96,35 @@ class TopNRecommender:
         devices=None,
         interpret: bool | None = None,
     ):
-        self.ensemble = ensemble
-        self.interpret = interpret
-        self.devices = devices
-        u_flat, v_flat = ensemble.scoring_matrices()
-        self.u_flat = u_flat  # (M, S*K) trained-user scoring rows
-        if devices is not None:
-            n_shards = len(devices)
-        self.n_shards = max(1, min(n_shards, v_flat.shape[0]))
-        bounds = np.linspace(0, v_flat.shape[0], self.n_shards + 1).astype(int)
-        self.shard_bounds = bounds
-        self.shard_offsets = bounds[:-1]
-        self.v_shards = self._shard(v_flat)
+        super().__init__(ensemble, n_hosts=n_shards, devices=devices,
+                         interpret=interpret)
 
-    def _shard(self, v_flat: jax.Array) -> list[jax.Array]:
-        """Split V' row-wise on the precomputed bounds, one chunk per device."""
-        shards = []
-        for i in range(self.n_shards):
-            chunk = v_flat[self.shard_bounds[i]: self.shard_bounds[i + 1]]
-            if self.devices is not None:
-                chunk = jax.device_put(chunk, self.devices[i % len(self.devices)])
-            shards.append(chunk)
-        return shards
+    def _layout_kwargs(self) -> dict:
+        # rebind() builds `type(self)(ensemble, **layout)` — the subclass
+        # spells the host axis n_shards
+        return dict(n_shards=self.n_hosts, devices=self.devices,
+                    interpret=self.interpret)
 
-    # ------------------------------------------------------------------
-    def rebind(self, ensemble: PosteriorEnsemble) -> "TopNRecommender":
-        """A new recommender serving `ensemble` through this one's compiled
-        executables: same shard bounds, same device placement, and — because
-        every jit in the scoring path keys on shapes this layout pins — zero
-        retraces of the top-N kernel (kernels.bpmf_topn.trace_count is flat
-        across a rebind; tested). The publish hot path: a same-shape sample
-        publication costs one V' re-shard + buffer swap, not a recompile.
+    # -- flat-array accessors (compat with pre-tier callers) -------------
+    @property
+    def n_shards(self) -> int:
+        return self.n_hosts
 
-        Self is left untouched and fully servable — callers swap the
-        returned instance in atomically (RecommendFrontend holds requests'
-        view stable by capturing the old instance under its lock).
+    @property
+    def u_flat(self) -> jax.Array:
+        """(M, S*K) trained-user scoring rows (host 0's U replica — all
+        replicas are identical by construction)."""
+        return self.hosts[0].live.u_replica
 
-        Raises ValueError when the ensemble's (S, M, N, K) changed; the
-        caller falls back to a full rebuild (which will retrace).
-        """
-        if ensemble.shape_key() != self.ensemble.shape_key():
-            raise ValueError(
-                f"shape changed: {ensemble.shape_key()} vs "
-                f"{self.ensemble.shape_key()} — rebuild, don't rebind"
-            )
-        # same config + same shapes -> identical shard bounds and device
-        # placement, so every kernel shape lands on the jit cache entries
-        # this instance already compiled
-        return self.__class__(
-            ensemble, n_shards=self.n_shards, devices=self.devices,
-            interpret=self.interpret,
-        )
+    @property
+    def v_shards(self) -> list[jax.Array]:
+        return [h.live.v_shard for h in self.hosts]
 
-    # ------------------------------------------------------------------
-    def _topk_rows(self, rows: jax.Array, topk: int
-                   ) -> tuple[jax.Array, jax.Array]:
-        """Kernel top-k of rows @ V'^T across all item shards."""
-        topk = min(topk, self.ensemble.n_items)
-        vals, idx = [], []
-        for off, chunk in zip(self.shard_offsets, self.v_shards):
-            k_eff = min(topk, chunk.shape[0])
-            v, i = ops.topn_scores(rows, chunk, k_eff, interpret=self.interpret)
-            vals.append(v)
-            idx.append(i + np.int32(off))
-        if len(vals) == 1:
-            return vals[0], idx[0]
-        return _merge_topk(jnp.concatenate(vals, 1), jnp.concatenate(idx, 1), topk)
+    @property
+    def shard_bounds(self) -> np.ndarray:
+        return np.asarray([self.hosts[0].live.lo]
+                          + [h.live.hi for h in self.hosts])
 
-    def recommend_rows(
-        self,
-        rows: jax.Array,
-        topk: int,
-        *,
-        exclude: list[np.ndarray] | None = None,
-        fetch_hint: int | None = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Top-N for explicit scoring rows (B, S*K).
-
-        exclude: optional per-row arrays of item ids to drop (seen items).
-        fetch_hint: a batch-independent upper bound on topk + exclusions
-        (e.g. topk + SeenIndex.max_degree) — pins the candidate count so the
-        serving hot path compiles exactly one kernel shape per topk.
-        Returns host arrays (values (B, topk), indices (B, topk)); rows with
-        fewer than topk candidates left are padded with (-inf, -1).
-        """
-        b = rows.shape[0]
-        fetch = topk
-        if exclude is not None:
-            assert len(exclude) == b, (len(exclude), b)
-            fetch = topk + max((len(e) for e in exclude), default=0)
-        if fetch_hint is not None:
-            # honored with or without exclusions: a hint pins the kernel
-            # shape even for exclusion-free (e.g. cold-start) batches, whose
-            # drifting topk would otherwise thrash the jit cache
-            fetch = max(fetch, fetch_hint)
-        if exclude is not None or fetch_hint is not None:
-            # round up to a power of two: candidate count changes per batch,
-            # quantizing it keeps the jit cache to O(log n_items) entries
-            fetch = 1 << (fetch - 1).bit_length()
-            fetch = min(fetch, self.ensemble.n_items)
-        vals, idx = self._topk_rows(rows, fetch)
-        vals = np.asarray(vals) + self.ensemble.global_mean
-        idx = np.asarray(idx)
-        if exclude is None:
-            return vals[:, :topk], idx[:, :topk]
-        out_v = np.full((b, topk), -np.inf, np.float32)
-        out_i = np.full((b, topk), -1, np.int32)
-        for r in range(b):
-            keep = ~np.isin(idx[r], exclude[r])
-            kept_v, kept_i = vals[r][keep][:topk], idx[r][keep][:topk]
-            out_v[r, : len(kept_v)] = kept_v
-            out_i[r, : len(kept_i)] = kept_i
-        return out_v, out_i
-
-    # ------------------------------------------------------------------
-    def recommend(
-        self,
-        user_ids: np.ndarray,
-        topk: int,
-        *,
-        seen: SparseRatings | SeenIndex | None = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Top-N for trained users. `seen` excludes each user's already-rated
-        items; pass a prebuilt SeenIndex on the serving hot path (a raw
-        SparseRatings is indexed from scratch on every call)."""
-        user_ids = np.asarray(user_ids, np.int32)
-        rows = self.u_flat[user_ids]
-        exclude = None
-        fetch_hint = None
-        if seen is not None:
-            if isinstance(seen, SparseRatings):
-                seen = SeenIndex(seen)
-            exclude = [seen[int(u)] for u in user_ids]
-            fetch_hint = topk + seen.max_degree
-        return self.recommend_rows(rows, topk, exclude=exclude,
-                                   fetch_hint=fetch_hint)
-
-    def recommend_factors(
-        self,
-        u_draws: jax.Array,
-        topk: int,
-        *,
-        exclude: list[np.ndarray] | None = None,
-        fetch_hint: int | None = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        """Top-N for fold-in users given their per-draw factors (S, B, K).
-
-        fetch_hint pins the candidate count across cold batches (the
-        frontend passes topk + batch max degree, power-of-two quantized) so
-        varying per-batch rated counts reuse one compiled kernel shape."""
-        rows = self.ensemble.user_scoring_rows(u_draws)
-        return self.recommend_rows(rows, topk, exclude=exclude,
-                                   fetch_hint=fetch_hint)
+    @property
+    def shard_offsets(self) -> np.ndarray:
+        return np.asarray([h.live.lo for h in self.hosts])

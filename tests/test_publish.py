@@ -297,6 +297,139 @@ def test_rebind_scores_new_factors_through_old_layout():
     assert idx[0][0] == 4 % N and vals[0][0] == pytest.approx(4.0)
 
 
+def test_subscriber_hammer_publishes_while_draining():
+    """Two publisher threads hammer the channel while the frontend's
+    subscriber thread drains it — the locked `_epoch` read in the loop and
+    the locked write in `_swap` must agree: served epochs stay monotone and
+    the final publish is always adopted (no lost-wakeup on a stale read)."""
+    ch = PublicationChannel(window=1)
+    ch.publish(1, epoch_coded_sample(1))
+    fe = RecommendFrontend(channel=ch, subscribe=True, max_batch=4)
+    barrier = threading.Barrier(2)
+
+    def publisher(steps):
+        barrier.wait()
+        for step in steps:
+            ch.publish(step, epoch_coded_sample(step))
+            time.sleep(0.0005)
+
+    threads = [
+        threading.Thread(target=publisher, args=(range(2, 120, 2),)),
+        threading.Thread(target=publisher, args=(range(3, 120, 2),)),
+    ]
+    for t in threads:
+        t.start()
+    epochs = []
+    try:
+        while any(t.is_alive() for t in threads):
+            fe.submit(0, topk=1)
+            for res in fe.flush():
+                epochs.append(res.epoch)
+                assert res.items[0] == res.epoch % N, res
+    finally:
+        for t in threads:
+            t.join(timeout=20.0)
+        ch.close()
+    # the drain path must catch the last published epoch
+    deadline = time.monotonic() + 20.0
+    while fe.epoch < ch.epoch and time.monotonic() < deadline:
+        time.sleep(0.005)
+    fe.close()
+    assert fe.epoch == ch.epoch == 119
+    assert epochs == sorted(epochs)
+    assert fe.swaps >= 2
+
+
+# ---------------------------------------------------------------------------
+# the seen-item index across shape-changing swaps
+# ---------------------------------------------------------------------------
+def _sized_sample(step: int, m: int, n: int) -> dict:
+    rng = np.random.default_rng(step)
+    k = K
+    return {
+        "u": rng.normal(size=(m, k)).astype(np.float32),
+        "v": rng.normal(size=(n, k)).astype(np.float32),
+        "hyper_u_mu": np.zeros(k, np.float32),
+        "hyper_u_lam": np.eye(k, dtype=np.float32),
+        "hyper_v_mu": np.zeros(k, np.float32),
+        "hyper_v_lam": np.eye(k, dtype=np.float32),
+        "global_mean": np.float32(0.0),
+        "alpha": np.float32(2.0),
+    }
+
+
+def _boot_ratings():
+    from repro.data.sparse import SparseRatings
+
+    rows = np.repeat(np.arange(M, dtype=np.int32), 3)
+    rng = np.random.default_rng(7)
+    cols = rng.integers(0, N, rows.size).astype(np.int32)
+    return SparseRatings(rows=rows, cols=cols,
+                         vals=np.ones(rows.size, np.float32), shape=(M, N))
+
+
+def test_seen_index_follows_grown_axes_on_swap():
+    """The exclusion index is built against boot-time ratings; a swap that
+    grows the user/item axes must rebuild it padded to the new shape (new
+    users get empty exclusion rows) instead of silently under-excluding
+    (or crashing the seen lookup for users past the boot axis)."""
+    train = _boot_ratings()
+    ch = PublicationChannel(window=1)
+    ch.publish(1, _sized_sample(1, M, N))
+    fe = RecommendFrontend(channel=ch, subscribe=False, seen=train,
+                           max_batch=4)
+    assert fe.seen.shape == (M, N)
+
+    ch.publish(2, _sized_sample(2, M + 6, N + 3))  # trainer grew both axes
+    assert fe.refresh() is True
+    assert fe.seen.shape == (M + 6, N + 3)
+    # an existing user still gets their boot-time exclusions
+    fe.submit(0, topk=5)
+    # a user beyond the boot axis is servable with an empty exclusion row
+    fe.submit(M + 2, topk=5)
+    results = fe.flush()
+    assert len(results) == 2
+    seen0 = set(train.cols[train.rows == 0].tolist())
+    assert not seen0.intersection(results[0].items.tolist())
+
+
+def test_seen_index_rejects_shrunk_ensemble():
+    """An ensemble smaller than the ratings matrix cannot be served with
+    exclusions intact — adopting it must fail loudly, not under-exclude."""
+    train = _boot_ratings()
+    ch = PublicationChannel(window=1)
+    ch.publish(1, _sized_sample(1, M, N))
+    fe = RecommendFrontend(channel=ch, subscribe=False, seen=train,
+                           max_batch=4)
+    ch.publish(2, _sized_sample(2, M - 4, N))
+    with pytest.raises(ValueError, match="under-exclude"):
+        fe.refresh()
+
+
+def test_subscriber_survives_rejected_publish():
+    """A rejected adoption (shrunk ensemble vs the seen index) must not
+    kill the subscriber thread: the bad epoch is recorded and skipped, and
+    the next acceptable publish is still adopted."""
+    train = _boot_ratings()
+    ch = PublicationChannel(window=1)
+    ch.publish(1, _sized_sample(1, M, N))
+    fe = RecommendFrontend(channel=ch, subscribe=True, seen=train,
+                           max_batch=4)
+    try:
+        ch.publish(2, _sized_sample(2, M - 4, N))   # rejected: shrunk axes
+        deadline = time.monotonic() + 20.0
+        while not fe.adopt_errors and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert fe.adopt_errors and fe.epoch == 1
+        ch.publish(3, _sized_sample(3, M, N))        # good again
+        while fe.epoch < 3 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert fe.epoch == 3  # the loop lived on and adopted it
+    finally:
+        ch.close()
+        fe.close()
+
+
 # ---------------------------------------------------------------------------
 # no torn ensemble: concurrent recommend() during a stream of publishes
 # ---------------------------------------------------------------------------

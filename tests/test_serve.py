@@ -222,6 +222,43 @@ def test_frontend_batches_and_matches_direct_path(trained, ensemble):
     assert fe.latency_percentiles()["p50"] >= 0
 
 
+def test_frontend_mixed_topk_batch_truncates_per_request(trained, ensemble):
+    """A micro-batch runs at max(p.topk) for one kernel shape, but each
+    ticket must get exactly its own topk rows back — a topk=5 ticket
+    batched with a topk=50 one must not receive 50 rows."""
+    root, train, _ = trained
+    fe = RecommendFrontend(root, seen=train, max_batch=8)
+    t_small = fe.submit(3, topk=5)
+    t_big = fe.submit(4, topk=50)
+    m = train.rows == 2
+    t_cold = fe.submit_ratings(train.cols[m], train.vals[m], topk=3)
+    results = {r.ticket: r for r in fe.flush()}
+    assert results[t_small].items.shape == (5,)
+    assert results[t_small].scores.shape == (5,)
+    assert results[t_big].items.shape == (50,)
+    assert results[t_cold].items.shape == (3,)
+    # and the truncated rows are the same the request would get alone
+    rec = TopNRecommender(ensemble)
+    vals, idx = rec.recommend(np.asarray([3], np.int32), 5, seen=train)
+    np.testing.assert_array_equal(results[t_small].items, idx[0])
+
+
+def test_recommend_rows_quantizes_fetch_without_exclusions(ensemble):
+    """Exclusion-free callers used to compile one kernel shape per distinct
+    topk; the fetch is now power-of-two quantized unconditionally, so every
+    topk in a pow2 bucket lands on one compiled executable."""
+    from repro.kernels import bpmf_topn
+
+    rec = TopNRecommender(ensemble)
+    rows = rec.u_flat[:8]
+    rec.recommend_rows(rows, 16)  # compile the 16-wide fetch once
+    before = bpmf_topn.trace_count()
+    for topk in (9, 12, 13, 16):
+        vals, idx = rec.recommend_rows(rows, topk)
+        assert idx.shape == (8, topk)
+    assert bpmf_topn.trace_count() == before  # all served by the one shape
+
+
 def test_ensemble_load_survives_concurrent_prune(trained, tmp_path):
     """A co-running trainer can prune a draw between a reader listing steps
     and loading them (the store lock is per-process); the loader must skip
