@@ -36,6 +36,21 @@ def parse_csv_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
+def append_history_row(record: dict, path: Path | str | None = None) -> Path:
+    """Append ONE compact JSON line to BENCH_history.jsonl.
+
+    The full BENCH_<suite>.json artifacts are gitignored (BENCH_*.json), so
+    the repo's perf trajectory was invisible across PRs; this file is the
+    committed counterpart — one line per `run.py --smoke` invocation, small
+    enough to live in git while CI also uploads it alongside the full
+    artifacts.
+    """
+    path = Path(path) if path is not None else REPO_ROOT / "BENCH_history.jsonl"
+    with path.open("a") as f:
+        f.write(json.dumps(record, separators=(",", ":"), sort_keys=True) + "\n")
+    return path
+
+
 def write_bench_json(suite: str, rows: list[str], extra: dict | None = None,
                      out_dir: Path | str | None = None) -> Path:
     """Persist a suite's rows as BENCH_<suite>.json next to the repo root,

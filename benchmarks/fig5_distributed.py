@@ -1,9 +1,10 @@
 """Paper Fig 5: distributed strong scaling, sync vs async communication.
 
 Measured in a subprocess per device count (jax pins the host device count at
-first init). For each P in {1, 2, 4, 8}: updates/sec of the ring (async,
-GASPI analogue) vs the all-gather (bulk-synchronous, MPI_bcast analogue)
-sampler on the ChEMBL-like benchmark, plus parallel efficiency vs P=1.
+first init). For each P in {1, 2, 4, 8}: updates/sec of the ring (pipelined,
+GASPI analogue), the all-gather (bulk-synchronous, MPI_bcast analogue), and
+the stale-tolerant fused "async" sampler on the ChEMBL-like benchmark, plus
+parallel efficiency vs P=1 and an RMSE-parity gate for async at P=4.
 
 Wall-clock on a single shared CPU is a *scheduling* proxy — the structural
 comparison (collective bytes, overlap) is in fig6_overlap.py; both views
@@ -33,24 +34,32 @@ from repro.core.distributed import DistributedBPMF
 ratings, _, _ = chembl_like(scale=0.002, seed=0)
 train, test = train_test_split(ratings, 0.05, seed=1)
 out = {{}}
-for mode in ("ring", "allgather"):
+for mode in ("ring", "allgather", "async"):
     s = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode, width=32)
     st = s.init(0)
     st = s.sweep(st); jax.block_until_ready(st.u)   # compile
-    t0 = time.perf_counter()
-    iters = 3
+    iters = {iters}
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         st = s.sweep(st)
-    jax.block_until_ready(st.u)
-    dt = (time.perf_counter() - t0) / iters
+        jax.block_until_ready(st.u)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    dt = times[len(times) // 2]   # median: robust to scheduler hiccups
+    # run on to a common sweep count before scoring: the stale-by-one
+    # async chain needs ~2x the burn-in in sweeps, so RMSE parity is a
+    # plateau property, not a sweep-4 property
+    for _ in range(10 - 1 - iters):
+        st = s.sweep(st)
     out[mode] = {{"sweep_s": dt, "rmse": s.rmse(st),
                   "items": train.shape[0] + train.shape[1]}}
 print(json.dumps(out))
 """
 
 
-def run_p(p: int) -> dict:
-    code = _WORKER.format(p=p, src=SRC)
+def run_p(p: int, iters: int = 3) -> dict:
+    code = _WORKER.format(p=p, src=SRC, iters=iters)
     res = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=900,
@@ -60,21 +69,41 @@ def run_p(p: int) -> dict:
     return json.loads(res.stdout.strip().splitlines()[-1])
 
 
-def main() -> list[str]:
+def main(smoke: bool = False) -> list[str]:
+    import os
+
     rows = []
     base = {}
-    for p in (1, 2, 4, 8):
-        out = run_p(p)
-        for mode in ("ring", "allgather"):
+    rmse_p4 = {}
+    # parallel efficiency is relative to the cores that physically exist:
+    # on an n-core host, P > n forced host devices time-slice, so the
+    # ideal is base * min(P, n), not base * P. (The seed's flat ~0.5
+    # "efficiency" at any P was a recompile artifact — the timed window
+    # was compile time, constant in P — not real scaling.)
+    cores = os.cpu_count() or 1
+    for p in (1, 4) if smoke else (1, 2, 4, 8):
+        out = run_p(p, iters=1 if smoke else 3)
+        for mode in ("ring", "allgather", "async"):
             d = out[mode]
             ups = d["items"] / d["sweep_s"]
             if p == 1:
                 base[mode] = ups
-            eff = ups / (base[mode] * p)
+            eff = ups / (base[mode] * min(p, cores))
+            if p == 4:
+                rmse_p4[mode] = d["rmse"]
             rows.append(csv_row(
                 f"fig5_{mode}_p{p}", d["sweep_s"] * 1e6,
                 f"updates_per_s={ups:.0f};efficiency={eff:.2f};rmse={d['rmse']:.3f}",
             ))
+    # RMSE-parity gate (paper Sec 5.2): the stale-by-one async chain must
+    # land on the same plateau as the exact ring sampler at p=4
+    gap = abs(rmse_p4["async"] - rmse_p4["ring"])
+    rows.append(csv_row("fig5_async_rmse_parity_p4", 0.0,
+                        f"|async-ring|={gap:.4f}"))
+    assert gap < 0.05, (
+        f"async RMSE diverged from ring at p=4: {rmse_p4['async']:.4f} vs "
+        f"{rmse_p4['ring']:.4f}"
+    )
     return rows
 
 

@@ -30,32 +30,50 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 _WORKER = """
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
-import sys, json
+import sys, json, re
 sys.path.insert(0, {src!r})
 import jax
 from repro.data import chembl_like, train_test_split
 from repro.core.distributed import DistributedBPMF
 from repro.launch.hlo_analysis import HloCostModel
 
+
+def in_loop_permute(txt):
+    # dependence check: a collective-permute INSIDE a while body is the
+    # pipelined exchange (one block forwarded per scan step, overlappable
+    # with that step's syrk); a bulk all-gather sits in straight-line code.
+    # Parse the computations named as `body=` of some while op and look for
+    # the permute inside those blocks only.
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", txt))
+    cur = None
+    found = False
+    for line in txt.splitlines():
+        ls = line.rstrip()
+        if not line[:1].isspace() and ls.endswith("{{") and "(" in ls:
+            # computation header: `%name (params...) -> type {{` (or ENTRY)
+            tok = ls.split()[1] if ls.startswith("ENTRY") else ls.split()[0]
+            cur = tok.lstrip("%").split("(")[0]
+        elif ls == "}}":
+            cur = None
+        elif " collective-permute(" in line and cur in bodies:
+            found = True
+    return found
+
+
 ratings, _, _ = chembl_like(scale=0.002, seed=0)
 train, test = train_test_split(ratings, 0.05, seed=1)
 out = {{}}
-for mode in ("ring", "allgather"):
+for mode in ("ring", "allgather", "async"):
     s = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode, width=32)
     st = s.init(0)
     lowered = s._sweep.lower(st)
     txt = lowered.compile().as_text()
     res = HloCostModel(txt).analyze()
-    # dependence check: does a collective-permute appear inside a while body
-    # (pipelined) vs a bulk all-gather in straight-line code?
-    in_loop_permute = False
-    for line in txt.splitlines():
-        if "collective-permute" in line and "%" in line:
-            in_loop_permute = True
     out[mode] = {{
         "collective_bytes": res["collective_bytes"],
         "collective_counts": res["collective_counts"],
         "flops": res["flops"],
+        "in_loop_permute": in_loop_permute(txt),
     }}
 print(json.dumps(out))
 """
@@ -70,13 +88,24 @@ def main() -> list[str]:
     if res.returncode != 0:
         raise RuntimeError(res.stderr[-2000:])
     out = json.loads(res.stdout.strip().splitlines()[-1])
+    # structural gate: the ring (and the fused async ring) MUST schedule its
+    # permutes inside the scanned while body — that dependence structure is
+    # the whole overlap claim. The bulk all-gather must not.
+    assert out["ring"]["in_loop_permute"], (
+        "ring mode lost its pipelined collective-permute (no permute found "
+        "inside a while body in the compiled HLO)"
+    )
+    assert out["async"]["in_loop_permute"], (
+        "async mode lost its pipelined collective-permute"
+    )
     rows = []
     for mode, d in out.items():
         total = sum(d["collective_bytes"].values())
         counts = {k: v for k, v in d["collective_counts"].items() if v}
         rows.append(csv_row(
             f"fig6_{mode}_collectives", 0.0,
-            f"bytes={total};counts={counts};flops={d['flops']:.3g}",
+            f"bytes={total};counts={counts};flops={d['flops']:.3g};"
+            f"in_loop_permute={d['in_loop_permute']}",
         ))
     ring = sum(out["ring"]["collective_bytes"].values())
     sync = sum(out["allgather"]["collective_bytes"].values())

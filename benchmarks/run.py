@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows and writes each suite's rows
 as a machine-readable ``BENCH_<suite>.json`` artifact (same records) so the
-perf trajectory is comparable across PRs. Figures:
+perf trajectory is comparable across PRs. ``--smoke`` runs a fast subset
+(reduced iteration counts) and appends one compact line per invocation to
+the COMMITTED ``BENCH_history.jsonl`` — the BENCH_*.json artifacts are
+gitignored, so the history file is what carries the trajectory in git.
+Figures:
   fig4   multicore updates/sec (engine comparison + load-balance stats)
   fig5   distributed strong scaling, ring (async) vs allgather (sync)
   fig6   comm/compute overlap structure from compiled HLO
@@ -20,44 +24,84 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
     from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
     from benchmarks import foldin_latency, publish_latency, rmse_table
     from benchmarks import roofline, serve_cluster, serve_topn, sweep_throughput
-    from benchmarks.common import write_bench_json
+    from benchmarks.common import append_history_row, parse_csv_row, write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("suite", nargs="?", default=None,
+                    help="run only this suite (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset with reduced iters; appends one "
+                         "compact row to the committed BENCH_history.jsonl")
+    args = ap.parse_args(argv)
 
     # sweep runs before roofline: roofline's measured-vs-predicted rows
     # read the BENCH_sweep.json the sweep suite just wrote. Suites flagged
     # self_publish write their own (richer) BENCH_<suite>.json — the
-    # driver must not overwrite it with a plain copy.
+    # driver must not overwrite it with a plain copy. smoke_fn, when set,
+    # is the reduced-cost variant --smoke runs; suites without one are
+    # skipped in smoke mode.
     suites = [
-        ("fig4", fig4_multicore.main, False),
-        ("fig5", fig5_distributed.main, False),
-        ("fig6", fig6_overlap.main, False),
-        ("rmse", rmse_table.main, False),
-        ("sweep", sweep_throughput.main, True),
-        ("roofline", roofline.main, False),
-        ("serve", serve_topn.main, False),
-        ("serve_cluster", serve_cluster.main, True),
-        ("publish", publish_latency.main, False),
-        ("foldin", foldin_latency.main, False),
+        ("fig4", fig4_multicore.main, False,
+         lambda: fig4_multicore.main(smoke=True)),
+        ("fig5", fig5_distributed.main, False,
+         lambda: fig5_distributed.main(smoke=True)),
+        ("fig6", fig6_overlap.main, False, None),
+        ("rmse", rmse_table.main, False, None),
+        ("sweep", sweep_throughput.main, True,
+         lambda: sweep_throughput.main(smoke=True)),
+        ("roofline", roofline.main, False, None),
+        ("serve", serve_topn.main, False, None),
+        ("serve_cluster", serve_cluster.main, True, None),
+        ("publish", publish_latency.main, False, None),
+        ("foldin", foldin_latency.main, False,
+         lambda: foldin_latency.main(smoke=True)),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn, self_publish in suites:
-        if only and name != only:
+    history: dict[str, dict] = {}
+    for name, fn, self_publish, smoke_fn in suites:
+        if args.suite and name != args.suite:
             continue
+        if args.smoke:
+            if smoke_fn is None:
+                continue
+            fn = smoke_fn
         try:
             rows = list(fn())
             for row in rows:
                 print(row)
             if not self_publish:
                 write_bench_json(name, rows)
+            history[name] = {
+                r["name"]: [r["us_per_call"], r["derived"]]
+                for r in map(parse_csv_row, rows)
+            }
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.smoke and history:
+        import subprocess as sp
+        import time
+
+        try:
+            rev = sp.run(["git", "rev-parse", "--short", "HEAD"],
+                         capture_output=True, text=True, timeout=10,
+                         ).stdout.strip() or None
+        except Exception:  # noqa: BLE001
+            rev = None
+        path = append_history_row({
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "rev": rev,
+            "suites": history,
+        })
+        print(f"# appended smoke row -> {path}")
     if failures:
         raise SystemExit(1)
 

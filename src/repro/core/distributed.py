@@ -4,19 +4,35 @@ The paper's central result (Sec 4.3, Fig 5-6) is that one-sided asynchronous
 communication (GASPI) hides ~85% of communication behind computation while
 bulk-synchronous exchange hides none. The TPU-idiomatic equivalent:
 
-  sync / "bcast"  : all_gather the counterpart factor matrix, then sweep —
+  "allgather"     : all_gather the counterpart factor matrix, then sweep —
                     all communication up front, none overlapped.
-  async / "ring"  : the counterpart matrix stays sharded; each of P pipeline
+  "ring"          : the counterpart matrix stays sharded; each of P pipeline
                     steps computes partial precision contributions against
                     the currently-held block while lax.ppermute forwards it —
                     the permute of step s+1 has no data dependence on the
                     syrk of step s, so XLA's latency-hiding scheduler runs
                     them concurrently (the "both" region of the paper's
-                    Fig 6).
+                    Fig 6). Phases stay sequential: the user phase waits for
+                    the full v draw.
+  "async"         : the stale-tolerant pipeline (paper Sec 4.3). BOTH phases
+                    ride ONE ring scan: each step issues the next blocks'
+                    ppermutes before either accumulate consumes its held
+                    operand, then accumulates movie stats against the held u
+                    block and user stats against the held v block. The user
+                    update therefore reads the PREVIOUS sweep's v — stale by
+                    exactly one draw, the bounded staleness Gibbs tolerates
+                    (arXiv 2004.02561, 1503.01596): the chain decouples into
+                    two interleaved samplers whose draws are each exactly
+                    conditional, so the stationary distribution is unchanged
+                    and only burn-in lengthens (~2x in sweeps, repaid >2x in
+                    wall clock at moderate P). Halves the scan count per
+                    sweep and removes the inter-phase barrier.
 
-Both modes share plans, keys, and per-item noise (folded from global item
+All modes share plans, keys, and per-item noise (folded from global item
 ids), so they produce bit-comparable samples — the accuracy-parity claim of
-Sec 5.2 is testable exactly.
+Sec 5.2 is testable exactly: an async sweep's v draw is bit-identical to the
+ring sweep's from the same state (the movie phase consumes identical
+inputs); only the u draw sees the one-sweep-older v.
 """
 from __future__ import annotations
 
@@ -64,11 +80,20 @@ class DistState(NamedTuple):
     hyper_v: HyperParams
     key: jax.Array
     step: jax.Array
+    # async mode only (None otherwise): the v the u draw was conditioned
+    # on — one sweep stale. The stale-by-one sweep interleaves two valid
+    # Gibbs chains, so (u, v) at the same step are draws from DIFFERENT
+    # chains whose latent rotations drift apart; predictions must pair u
+    # with v_eval, the jointly-coupled sample.
+    v_eval: jax.Array | None = None
 
 
 # stats engines the distributed sweep supports: the einsum reference and
 # the fused gather-syrk kernel (core.gibbs.ENGINES documents the family)
 DIST_ENGINES = ("einsum", "fused")
+
+# exchange modes: see the module docstring
+DIST_MODES = ("ring", "allgather", "async")
 
 
 def _per_item_noise(key: jax.Array, item_ids: jax.Array, k: int) -> jax.Array:
@@ -152,13 +177,61 @@ def _phase_ring(key, counter_blk, plans, item_ids, hyper, alpha, n_shards,
     (blk, prec, rhs), _ = jax.lax.scan(
         step, (counter_blk, prec0, rhs0), jnp.arange(n_shards)
     )
+    return _finish_phase(key, prec, rhs, item_ids, hyper, alpha)
 
+
+def _finish_phase(key, prec, rhs, item_ids, hyper, alpha):
+    """Raw accumulated stats -> posterior draw for this shard's items."""
+    k = rhs.shape[-1]
     prec = hyper.lam[None] + alpha * prec
     rhs = (hyper.lam @ hyper.mu)[None] + alpha * rhs
     z = _per_item_noise(key, item_ids, k)
     new = _chol_sample(prec, rhs, z)
-    new = jnp.where(item_ids[:, None] >= 0, new, 0.0)
-    return new
+    return jnp.where(item_ids[:, None] >= 0, new, 0.0)
+
+
+def _phase_ring_async(k_v, k_u, u_blk, v_blk, v_plans, u_plans, v_ids, u_ids,
+                      hyper_v, hyper_u, alpha, n_shards, engine):
+    """Both Gibbs phases fused into ONE stale-tolerant ring scan.
+
+    Each step first issues the ppermutes that deliver step s+1's blocks —
+    they read only the held (u, v) blocks, never this step's accumulates, so
+    the collectives are in flight for the entire accumulate pair — then
+    accumulates movie stats against the held u block and user stats against
+    the held v block. v comes from the carry (previous sweep's draw): the
+    user update is stale by exactly one sweep. One scan of P steps replaces
+    ring mode's two, and the user phase no longer waits on the full v draw.
+
+    The movie accumulation consumes inputs bit-identical to ring mode's, in
+    the same order, so from equal states the v draw matches ring
+    bit-for-bit (pinned by a parity test).
+    """
+    n_v = v_ids.shape[0]
+    n_u = u_ids.shape[0]
+    k = u_blk.shape[-1]
+    pid = jax.lax.axis_index(AXIS)
+    fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def step(carry, s):
+        ub, vb, pv, rv, pu, ru = carry
+        src = jnp.mod(pid - s, n_shards)
+        take = lambda plans: tuple(jnp.take(a, src, axis=0) for a in plans)
+        # next blocks, issued before either accumulate touches the held ones
+        ub_next = jax.lax.ppermute(ub, AXIS, fwd)
+        vb_next = jax.lax.ppermute(vb, AXIS, fwd)
+        dpv, drv = _accumulate_block(ub, *take(v_plans), n_v, engine=engine)
+        dpu, dru = _accumulate_block(vb, *take(u_plans), n_u, engine=engine)
+        return (ub_next, vb_next, pv + dpv, rv + drv, pu + dpu, ru + dru), None
+
+    init = (
+        u_blk, v_blk,
+        jnp.zeros((n_v, k, k), jnp.float32), jnp.zeros((n_v, k), jnp.float32),
+        jnp.zeros((n_u, k, k), jnp.float32), jnp.zeros((n_u, k), jnp.float32),
+    )
+    (_, _, pv, rv, pu, ru), _ = jax.lax.scan(step, init, jnp.arange(n_shards))
+    v_new = _finish_phase(k_v, pv, rv, v_ids, hyper_v, alpha)
+    u_new = _finish_phase(k_u, pu, ru, u_ids, hyper_u, alpha)
+    return v_new, u_new
 
 
 def _phase_allgather(key, counter_blk, plan_full, item_ids, hyper, alpha,
@@ -168,15 +241,10 @@ def _phase_allgather(key, counter_blk, plan_full, item_ids, hyper, alpha,
     full = full.reshape(-1, full.shape[-1])
     idx, val, msk, seg, seg_dense, seg_map = plan_full
     n_loc = item_ids.shape[0]
-    k = counter_blk.shape[-1]
     prec, rhs = _accumulate_block(
         full, idx, val, msk, seg, seg_dense, seg_map, n_loc, engine=engine
     )
-    prec = hyper.lam[None] + alpha * prec
-    rhs = (hyper.lam @ hyper.mu)[None] + alpha * rhs
-    z = _per_item_noise(key, item_ids, k)
-    new = _chol_sample(prec, rhs, z)
-    return jnp.where(item_ids[:, None] >= 0, new, 0.0)
+    return _finish_phase(key, prec, rhs, item_ids, hyper, alpha)
 
 
 def _chol_sample(prec, rhs, z):
@@ -206,6 +274,8 @@ def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior,
     """
     if engine not in DIST_ENGINES:
         raise ValueError(f"engine must be one of {DIST_ENGINES}, got {engine!r}")
+    if mode not in DIST_MODES:
+        raise ValueError(f"mode must be one of {DIST_MODES}, got {mode!r}")
     n_shards = mesh.shape[AXIS]
 
     def sweep(state: DistState, u_plans, v_plans, u_ids, v_ids):
@@ -216,9 +286,26 @@ def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior,
         u_ids = u_ids[0]
         v_ids = v_ids[0]
 
-        # movies phase
+        # both hyper draws read the PREVIOUS sweep's factors in every mode
+        # (sync modes too: su below uses state.u, not u_new) — so async can
+        # hoist them above its fused scan without changing a single bit
         sv = _stats(state.v[0], v_ids >= 0)
         hyper_v = sample_normal_wishart(k_hv, *sv, prior)
+        if mode == "async":
+            su = _stats(state.u[0], u_ids >= 0)
+            hyper_u = sample_normal_wishart(k_hu, *su, prior)
+            v_new, u_new = _phase_ring_async(
+                k_v, k_u, state.u[0], state.v[0], v_plans, u_plans,
+                v_ids, u_ids, hyper_v, hyper_u, alpha, n_shards, engine,
+            )
+            return DistState(
+                u=u_new[None], v=v_new[None],
+                hyper_u=hyper_u, hyper_v=hyper_v,
+                key=key, step=state.step + 1,
+                v_eval=state.v,   # u_new conditioned on this v
+            )
+
+        # movies phase
         if mode == "ring":
             v_new = _phase_ring(k_v, state.u[0], v_plans, v_ids, hyper_v,
                                 alpha, n_shards, engine)
@@ -244,6 +331,7 @@ def make_sweep(mesh: Mesh, mode: str, alpha: float, prior: NWPrior,
         u=P(AXIS), v=P(AXIS),
         hyper_u=HyperParams(P(), P()), hyper_v=HyperParams(P(), P()),
         key=P(), step=P(),
+        v_eval=P(AXIS) if mode == "async" else None,
     )
     plans_in = tuple(P(AXIS) for _ in range(6))
     return _shard_map(
@@ -266,11 +354,13 @@ class DistributedBPMF:
         mesh: Mesh | None = None,
         k: int = 32,
         alpha: float = 1.5,
-        width: int = 32,
-        mode: str = "ring",          # ring | allgather
+        width: int | str = 32,       # "auto": degree-aware grid width
+        mode: str = "ring",          # ring | allgather | async (DIST_MODES)
         engine: str = "einsum",      # einsum | fused (DIST_ENGINES)
         seed: int = 0,
     ):
+        if mode not in DIST_MODES:
+            raise ValueError(f"mode must be one of {DIST_MODES}, got {mode!r}")
         if mesh is None:
             n = len(jax.devices())
             mesh = jax.make_mesh((n,), (AXIS,))
@@ -357,8 +447,10 @@ class DistributedBPMF:
 
         mapped = make_sweep(self.mesh, self.mode, self.alpha, self.prior,
                             engine=self.engine)
-        u_plans = self.u_ring if self.mode == "ring" else self.u_flat
-        v_plans = self.v_ring if self.mode == "ring" else self.v_flat
+        # ring and async share the per-block grid plans; only allgather
+        # needs the flattened full-counterpart layout
+        u_plans = self.u_flat if self.mode == "allgather" else self.u_ring
+        v_plans = self.v_flat if self.mode == "allgather" else self.v_ring
 
         @jax.jit
         def run(state):
@@ -372,24 +464,39 @@ class DistributedBPMF:
         ku, kv, key = jax.random.split(key, 3)
         p = self.n_shards
         sh = NamedSharding(self.mesh, P(AXIS))
+        # replicate the small leaves explicitly: the sweep's outputs carry
+        # these shardings, so an init state laid out any other way makes the
+        # SECOND sweep recompile — the whole first-sweeps timing window used
+        # to be compile time (the fig5 "efficiency plateau" artifact)
+        rep = NamedSharding(self.mesh, P())
         u = 0.1 * jax.random.normal(ku, (p, self.u_part.n_loc, self.k), jnp.float32)
         v = 0.1 * jax.random.normal(kv, (p, self.v_part.n_loc, self.k), jnp.float32)
+        v_dev = jax.device_put(v, sh)
         return DistState(
             u=jax.device_put(u, sh),
-            v=jax.device_put(v, sh),
-            hyper_u=init_hyper(self.k),
-            hyper_v=init_hyper(self.k),
-            key=key,
-            step=jnp.zeros((), jnp.int32),
+            v=v_dev,
+            hyper_u=jax.device_put(init_hyper(self.k), rep),
+            hyper_v=jax.device_put(init_hyper(self.k), rep),
+            key=jax.device_put(key, rep),
+            step=jax.device_put(jnp.zeros((), jnp.int32), rep),
+            v_eval=v_dev if self.mode == "async" else None,
         )
 
     def sweep(self, state: DistState) -> DistState:
         return self._sweep(state)
 
-    def gather_factors(self, state: DistState):
-        """(M, K), (N, K) in global entity order (host-side, for eval)."""
+    def gather_factors(self, state: DistState, *, coupled: bool = True):
+        """(M, K), (N, K) in global entity order (host-side, for eval).
+
+        In async mode the u draw conditioned on the PREVIOUS sweep's v, so
+        the jointly-coupled posterior sample — the one predictions must
+        use — is (u, v_eval). The fresh-but-uncoupled v (what the next
+        sweep consumes, and what ring's first sweep matches bit-for-bit)
+        is returned with coupled=False.
+        """
+        v_src = state.v if (state.v_eval is None or not coupled) else state.v_eval
         u = np.asarray(state.u).reshape(-1, self.k)
-        v = np.asarray(state.v).reshape(-1, self.k)
+        v = np.asarray(v_src).reshape(-1, self.k)
         m = self.u_part.shard.shape[0]
         n = self.v_part.shard.shape[0]
         uo = np.zeros((m, self.k), np.float32)

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buckets import Bucket, BucketPlan, plan_buckets
+from repro.core.buckets import Bucket, BucketPlan, WidthsSpec, plan_buckets
 from repro.core.hyper import (
     HyperParams,
     default_prior,
@@ -382,6 +382,13 @@ class GibbsSampler:
     `use_kernel=True`), "reference" for the seed flow. `bf16_gather`
     (fused engine) gathers counterpart factors at half width with fp32
     accumulation.
+
+    `widths` picks the bucket planner: the default "balanced" fits a
+    degree-aware width ladder to each plan's own degree histogram
+    (`core.buckets.balanced_widths` — the static work-stealing analogue;
+    the user and item plans resolve independently), or pass an explicit
+    tuple for a fixed ladder. The sampled chain is plan-independent up to
+    fp32 reduction order — every ladder draws the same per-item noise.
     """
 
     def __init__(
@@ -392,7 +399,7 @@ class GibbsSampler:
         k: int = 64,
         alpha: float = 1.5,
         burn_in: int = 8,
-        widths: tuple[int, ...] = (8, 32, 128, 512),
+        widths: WidthsSpec = "balanced",
         use_kernel: bool = False,
         engine: str | None = None,
         bf16_gather: bool = False,

@@ -27,6 +27,13 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _block_w_for(w: int) -> int:
+    """W-tile size for a bucket of width w: 8-lane aligned (the balanced
+    planner emits non-pow2 widths; the kernels always see lane-aligned
+    tiles — the pad columns carry mask 0 and contribute exact zeros)."""
+    return min(128, max(8, -(-w // 8) * 8))
+
+
 def masked_syrk(vm: jax.Array, rv: jax.Array, *, interpret: bool | None = None):
     """(..., R, W, K) x (..., R, W) -> (prec (...,R,K,K), rhs (...,R,K)).
 
@@ -45,7 +52,7 @@ def masked_syrk(vm: jax.Array, rv: jax.Array, *, interpret: bool | None = None):
                 rhs.reshape(lead + rhs.shape[1:]))
     r, w, k = vm.shape
     block_rows = 8
-    block_w = min(128, max(8, w))
+    block_w = _block_w_for(w)
     vm_p = _pad_to(_pad_to(_pad_to(vm, 0, block_rows), 1, block_w), 2, 8)
     rv_p = _pad_to(_pad_to(rv, 0, block_rows), 1, block_w)
     prec, rhs = masked_syrk_pallas(
@@ -229,7 +236,7 @@ def gather_syrk_seg(
     interpret = (not _on_tpu()) if interpret is None else bool(interpret)
     r, w = indices.shape
     block_rows = 8
-    block_w = min(128, max(8, w))
+    block_w = _block_w_for(w)
     pad_r = (-r) % block_rows
     if pad_r:
         indices = jnp.pad(indices, ((0, pad_r), (0, 0)))

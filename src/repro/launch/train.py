@@ -120,8 +120,23 @@ def bpmf_train_main(args) -> None:
     train, test = train_test_split(ratings, 0.1, seed=args.seed + 1)
     print(f"training {train.shape[0]} x {train.shape[1]} ({train.nnz} ratings), "
           f"k={args.k}, {args.sweeps} sweeps (burn-in {args.burn_in}) -> {root}")
+
+    if args.mode != "single":
+        # multi-device path: DistributedBPMF over all local devices
+        from repro.core.distributed import DistributedBPMF
+
+        width = "auto" if args.plan == "balanced" else 32
+        d = DistributedBPMF(train, test, k=args.k, alpha=4.0,
+                            mode=args.mode, width=width,
+                            engine="fused" if args.engine == "fused" else "einsum")
+        state = d.run(args.sweeps, seed=args.seed, verbose=True)
+        print(f"test rmse {d.rmse(state):.4f} "
+              f"({d.n_shards} shards, mode={args.mode}, plan={args.plan})")
+        return
+
+    widths = "balanced" if args.plan == "balanced" else (8, 32, 128)
     sampler = GibbsSampler(train, test, k=args.k, alpha=4.0,
-                           burn_in=args.burn_in, widths=(8, 32, 128),
+                           burn_in=args.burn_in, widths=widths,
                            engine=args.engine)
     store = SampleStore(root, keep=args.keep)
     state = sampler.run(args.sweeps, seed=args.seed, store=store, verbose=True)
@@ -152,6 +167,16 @@ def main():
                     choices=["reference", "einsum", "kernel", "fused"],
                     help="sweep engine (default: restructured einsum; "
                          "'fused' = gather-syrk kernel path)")
+    ap.add_argument("--plan", default="balanced",
+                    choices=["balanced", "pow2"],
+                    help="bucket planner: 'balanced' fits variable widths to "
+                         "the degree profile (work-stealing-equivalent load "
+                         "balance); 'pow2' is the legacy fixed ladder")
+    ap.add_argument("--mode", default="single",
+                    choices=["single", "ring", "allgather", "async"],
+                    help="'single' = one-device GibbsSampler; otherwise a "
+                         "DistributedBPMF exchange mode ('async' = "
+                         "stale-tolerant fused ring pipeline)")
     ap.add_argument("--co-serve", action="store_true",
                     help="serve live recommendations from this process while "
                          "training, via the async publication channel")

@@ -45,7 +45,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buckets import DEFAULT_WIDTHS, pad_bucket, plan_buckets
+from repro.core.buckets import (
+    DEFAULT_WIDTHS,
+    balanced_widths,
+    pad_bucket,
+    plan_buckets,
+)
 from repro.core.gibbs import (
     DeviceBucket,
     bucket_stats,
@@ -107,6 +112,32 @@ class FoldInPlanCache:
         self.misses = 0
         self._entries: OrderedDict[tuple, None] = OrderedDict()
         self._lock = threading.Lock()
+
+    @classmethod
+    def balanced(
+        cls,
+        degrees: np.ndarray,
+        *,
+        max_buckets: int = 8,
+        lane: int = 1,
+        max_width: int = 512,
+        max_entries: int = 64,
+        quantum: int = 8,
+    ) -> "FoldInPlanCache":
+        """A cache whose width ladder is fit ONCE to a reference degree
+        profile (typically the training users') by the balanced planner,
+        then frozen. Per-request plans bin into these fixed — possibly
+        non-pow2 — widths, so quantized-profile keys stay trace-flat
+        exactly as with the pow2 ladder, while the padding tracks the
+        workload's real degree shape. The ladder must not be refit per
+        batch: that would make the width axis of the schema key
+        data-dependent and retrace on every profile drift.
+        """
+        widths = balanced_widths(
+            np.asarray(degrees), max_buckets=max_buckets,
+            lane=lane, max_width=max_width,
+        )
+        return cls(widths, max_entries=max_entries, quantum=quantum)
 
     @staticmethod
     def _quantize(n: int, quantum: int) -> int:

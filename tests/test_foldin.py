@@ -182,6 +182,30 @@ def test_plan_cache_quantizes_similar_profiles(ensemble):
     assert cache.misses == 2
 
 
+def test_balanced_plan_cache_non_pow2_trace_flat(ensemble):
+    """A cache built from a reference degree profile carries non-pow2
+    balanced widths; it must stay trace-flat across batches (the ladder is
+    fitted once and frozen, never refit per batch) and stay exact."""
+    ref_degrees = np.repeat([2, 3, 5, 11, 21], 40)
+    cache = FoldInPlanCache.balanced(ref_degrees)
+    assert any(w & (w - 1) for w in cache.widths)  # genuinely non-pow2
+    degrees = [2, 5, 11, 21]
+    exact = np.asarray(
+        fold_in(None, _batch(degrees, seed=40), ensemble, sample=False)
+    )
+    got = np.asarray(
+        fold_in(None, _batch(degrees, seed=40), ensemble, sample=False,
+                plan_cache=cache)
+    )
+    np.testing.assert_allclose(got, exact, rtol=1e-4, atol=1e-4)
+    traces = foldin_mod.trace_count()
+    for i in range(3):  # same profile, fresh items: no retrace
+        fold_in(None, _batch(degrees, seed=41 + i), ensemble, sample=False,
+                plan_cache=cache)
+    assert foldin_mod.trace_count() == traces
+    assert cache.stats()["misses"] == 1
+
+
 # ---------------------------------------------------------------------------
 # frontend: cold path wiring
 # ---------------------------------------------------------------------------
