@@ -57,7 +57,8 @@ def main(argv: list[str] | None = None) -> None:
          lambda: sweep_throughput.main(smoke=True)),
         ("roofline", roofline.main, False, None),
         ("serve", serve_topn.main, False, None),
-        ("serve_cluster", serve_cluster.main, True, None),
+        ("serve_cluster", serve_cluster.main, True,
+         lambda: serve_cluster.main(smoke=True)),
         ("publish", publish_latency.main, False, None),
         ("foldin", foldin_latency.main, False,
          lambda: foldin_latency.main(smoke=True)),

@@ -19,16 +19,22 @@ Three questions about serve/cluster.py, answered per host count:
   its small absolute cost next to scoring) visible.
 
 * publish -> all-shards-fresh — latency from a channel publish to the
-  epoch barrier committing (every host staged, coordinator flipped):
-  the cross-host analogue of benchmarks/publish_latency.py's swap clock.
+  epoch barrier committing (a quorum of every shard staged, coordinator
+  flipped): the cross-host analogue of benchmarks/publish_latency.py's
+  swap clock.
+
+* degraded mode — qps with replicas=2 and one host killed: the price of
+  routing every affected request around the dead replica (health check +
+  failover pick), vs the same replicated tier fully healthy.
 
 Writes BENCH_serve_cluster.json (self-published: keeps the host-count
-sweep as structured `scaling` records alongside the flat rows).
+sweep as structured `scaling` records alongside the flat rows); under
+`benchmarks/run.py --smoke` the rows — including the degraded-mode ones —
+land in the committed BENCH_history.jsonl.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 import jax
@@ -119,8 +125,27 @@ def main(smoke: bool = False) -> list[str]:
             "cand_width": width, "rel_time_vs_h1": sec / baseline,
         })
 
-    # publish -> all-shards-fresh barrier latency at the widest host count
+    # degraded mode: replicas=2 at the widest host count, one host killed —
+    # every request to the dead replica's shard pays the failover pick
     h = host_counts[-1]
+    degraded = {}
+    cluster = ClusterCoordinator(ensemble, n_hosts=h, replicas=2)
+    sec_healthy = time_fn(lambda: cluster.recommend(users, topk), iters=5)
+    cluster.health.kill(cluster.hosts[0].host_id)
+    cluster.recommend(users, topk)  # settle routing around the dead host
+    sec_down = time_fn(lambda: cluster.recommend(users, topk), iters=5)
+    for label, sec in (("healthy", sec_healthy), ("1down", sec_down)):
+        qps = batch / sec
+        degraded[label] = {"qps": qps, "us_per_call": sec * 1e6}
+        row = csv_row(
+            f"serve_cluster_h{h}r2_{label}", sec * 1e6,
+            f"qps={qps:,.0f} replicas=2 "
+            f"{'host0 dead, failover-routed' if label == '1down' else 'all hosts live'}",
+        )
+        print(row)
+        rows.append(row)
+
+    # publish -> all-shards-fresh barrier latency at the widest host count
     channel = PublicationChannel(window=s)
     for d in ensemble.samples:
         channel.publish(d.step, _sample_dict(d))
@@ -128,11 +153,8 @@ def main(smoke: bool = False) -> list[str]:
     base = ensemble.samples[-1]
     for i in range(publishes):
         channel.publish(base.step + 1 + i, _sample_dict(base))
-        deadline = time.perf_counter() + 60.0
-        while cluster.epoch < base.step + 1 + i:
-            if time.perf_counter() > deadline:
-                raise TimeoutError(f"barrier stuck at epoch {cluster.epoch}")
-            time.sleep(0.001)
+        if not cluster.wait_epoch(base.step + 1 + i, timeout=60.0):
+            raise TimeoutError(f"barrier stuck at epoch {cluster.epoch}")
     cluster.close()
     fresh = cluster.freshness_percentiles()
     row = csv_row(
@@ -145,9 +167,10 @@ def main(smoke: bool = False) -> list[str]:
 
     write_bench_json("serve_cluster", rows, extra={
         "scaling": scaling,
-        "merge_model": "O(hosts * topk) candidates exchanged per request row",
+        "merge_model": "O(shards * topk) candidates exchanged per request row",
         "fresh": {"p50_s": fresh["p50"], "max_s": fresh["max"],
                   "hosts": h, "commits": cluster.commits},
+        "degraded": {"hosts": h, "replicas": 2, **degraded},
     })
     return rows
 

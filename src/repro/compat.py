@@ -1,0 +1,29 @@
+"""Cross-version jax shims shared by the library and the test suite.
+
+`shard_map` moved twice across the jax versions this repo runs on: 0.4.x
+exposes it as `jax.experimental.shard_map.shard_map` with the replication
+check spelled `check_rep`; newer releases hoist it to `jax.shard_map` and
+rename the flag `check_vma`. Everything here routes through one shim so no
+caller (library code or a test's subprocess script) hard-codes either
+spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` with the `check_vma` spelling on every jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

@@ -57,20 +57,9 @@ from repro.data.sparse import SparseRatings
 AXIS = "items"
 
 
-def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
-    """jax.shard_map shim: older jax exposes it under jax.experimental with
-    the replication check named check_rep instead of check_vma."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=check_vma,
-        )
-    from jax.experimental.shard_map import shard_map as _sm
-
-    return _sm(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=check_vma,
-    )
+# jax.shard_map shim (check_vma vs check_rep across jax versions) — shared
+# with models/layers.py and the distributed tests
+from repro.compat import shard_map as _shard_map
 
 
 class DistState(NamedTuple):

@@ -42,8 +42,11 @@ replica, serve/cluster.py) per device with its own channel-subscriber
 thread, and drives traffic while a publisher thread pushes fresh epochs
 mid-stream. Verifies the tier serves top-N bit-identical to the
 single-host TopNRecommender on the same ensemble and that served epochs
-stay monotone across publishes (the all-shards-staged barrier), then
-reports qps, commit count, and publish -> all-shards-fresh latency.
+stay monotone across publishes (the quorum epoch barrier), then reports
+qps, commit count, and publish -> all-shards-fresh latency. Add
+`--replicas 2` to give every item shard two owner hosts: the run then
+also kills one host and verifies serving stays bit-identical and every
+publish still commits (failure semantics in docs/serving.md §6).
 """
 from __future__ import annotations
 
@@ -230,6 +233,7 @@ def _ensure_host_devices(n_hosts: int) -> None:
 def run_cluster(
     *,
     hosts: int = 2,
+    replicas: int = 1,
     samples: str | None = None,
     requests: int = 256,
     topk: int = 10,
@@ -244,7 +248,12 @@ def run_cluster(
     and a single-host TopNRecommender over the same ensemble, checks the
     tier's top-N is bit-identical, then serves `requests` warm-user batches
     while a publisher thread pushes `publishes` fresh same-shape epochs —
-    asserting served epochs never regress (the all-shards-staged barrier).
+    asserting served epochs never regress (the quorum epoch barrier).
+
+    With --replicas R > 1 each item shard gets R owner hosts, and the run
+    additionally kills one host before the publish stream: serving must
+    stay bit-identical (requests route to the surviving replica) and every
+    publish must still commit (the dead host is excluded from the quorum).
     Returns a metrics dict (also printed).
     """
     import threading
@@ -282,7 +291,8 @@ def run_cluster(
             "global_mean": np.float32(s.global_mean),
             "alpha": np.float32(s.alpha),
         })
-    cluster = ClusterCoordinator(ensemble, devices=devices, channel=channel)
+    cluster = ClusterCoordinator(ensemble, devices=devices, channel=channel,
+                                 replicas=replicas)
 
     # --- acceptance gate: the tier must match the single host bit-for-bit
     rng = np.random.default_rng(seed)
@@ -298,6 +308,19 @@ def run_cluster(
     if verbose:
         print(f"parity: {hosts}-host tier bit-identical to single-host "
               f"TopNRecommender over {max_batch} probe users (topk={topk})")
+
+    # --- degraded mode: kill one host, the tier must not notice
+    if replicas > 1:
+        cluster.health.kill(cluster.hosts[0].host_id)
+        v3, i3 = cluster.recommend(probe, topk)
+        if not (np.array_equal(i1, i3) and np.array_equal(v1, v3)):
+            raise AssertionError(
+                "degraded tier (1 host down) diverged from single-host"
+            )
+        if verbose:
+            print(f"degraded parity: host 0 killed, replicas={replicas} — "
+                  "still bit-identical; publishes must commit past the dead "
+                  "host (quorum barrier)")
 
     # --- serve while a publisher pushes fresh epochs mid-stream
     base = ensemble.samples[-1]
@@ -347,10 +370,12 @@ def run_cluster(
     fresh = cluster.freshness_percentiles()
     metrics = {
         "hosts": hosts,
+        "replicas": replicas,
         "served": served,
         "qps": served / dt,
         "bit_identical": identical,
         "commits": cluster.commits,
+        "reassignments": cluster.reassignments,
         "epochs_served": len(epochs_seen),
         "fresh_p50_ms": fresh["p50"] * 1e3,
         "fresh_max_ms": fresh["max"] * 1e3,
@@ -435,6 +460,10 @@ def main():
                          "--xla_force_host_platform_device_count when needed)")
     ap.add_argument("--publishes", type=int, default=4,
                     help="--hosts mode: fresh epochs pushed mid-stream")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="--hosts mode: owners per item shard; with R > 1 "
+                         "the run kills one host and verifies serving stays "
+                         "bit-identical and publishes still commit")
     ap.add_argument("--sweeps", type=int, default=60,
                     help="co-train: total Gibbs sweeps")
     ap.add_argument("--keep", type=int, default=4,
@@ -444,9 +473,9 @@ def main():
     if args.bpmf and args.hosts > 0:
         _ensure_host_devices(args.hosts)
         run_cluster(
-            hosts=args.hosts, samples=args.samples, requests=args.requests,
-            topk=args.topk, max_batch=min(args.max_batch, 8),
-            publishes=args.publishes,
+            hosts=args.hosts, replicas=args.replicas, samples=args.samples,
+            requests=args.requests, topk=args.topk,
+            max_batch=min(args.max_batch, 8), publishes=args.publishes,
         )
         return
     if args.bpmf:

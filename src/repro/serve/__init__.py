@@ -8,8 +8,11 @@ SampleStore; this package turns them into a service:
                 posterior-mean scores + predictive variance per (user, item)
   cluster.py    the multi-host serving tier — ShardHost (resident V' item
                 shard + routed U replica) and ClusterCoordinator (bounded
-                O(hosts * topk) candidate gather/merge, channel fan-out,
-                all-shards-staged epoch barrier)
+                O(shards * topk) candidate gather/merge, channel fan-out,
+                quorum epoch barrier, per-shard replication + failover)
+  faults.py     deterministic chaos: FaultPlan (seeded kill/hang/delay/drop
+                schedules at named seams), injectable clocks, and the
+                HostHealth heartbeat/error tracker the tier routes around
   topn.py       TopNRecommender — batched top-N over the catalogue, backed
                 by the Pallas streaming top-k kernel (kernels/bpmf_topn.py);
                 the single-host special case of the cluster tier
@@ -25,6 +28,13 @@ SampleStore; this package turns them into a service:
 """
 from repro.serve.cluster import ClusterCoordinator, ShardHost
 from repro.serve.ensemble import PosteriorEnsemble
+from repro.serve.faults import (
+    Clock,
+    FaultEvent,
+    FaultPlan,
+    HostHealth,
+    StepClock,
+)
 from repro.serve.foldin import FoldInPlanCache, fold_in, fold_in_loop
 from repro.serve.frontend import RecommendFrontend, RecommendResult
 from repro.serve.publish import ChannelSnapshot, PublicationChannel
@@ -32,9 +42,14 @@ from repro.serve.topn import SeenIndex, TopNRecommender
 
 __all__ = [
     "ChannelSnapshot",
+    "Clock",
     "ClusterCoordinator",
+    "FaultEvent",
+    "FaultPlan",
     "FoldInPlanCache",
+    "HostHealth",
     "ShardHost",
+    "StepClock",
     "PosteriorEnsemble",
     "PublicationChannel",
     "fold_in",

@@ -82,6 +82,7 @@ class RecommendFrontend:
         devices=None,
         mesh=None,
         n_hosts: int | None = None,
+        replicas: int = 1,
         interpret: bool | None = None,
     ):
         """seen: training ratings used to exclude already-rated items.
@@ -90,6 +91,9 @@ class RecommendFrontend:
         n_hosts: serve through the multi-host tier (serve/cluster.py) with
         this many shard hosts — one per device when enough exist — instead
         of the colocated single-host recommender.
+        replicas: per-shard replication factor for the tier (n_hosts only):
+        each item shard gets `replicas` owners and the coordinator routes
+        around dead or stale ones (serve/cluster.py failure semantics).
 
         channel: a PublicationChannel a co-running trainer publishes into;
         with subscribe=True (default) a daemon thread adopts each publish as
@@ -109,8 +113,12 @@ class RecommendFrontend:
             devices = list(mesh.devices.flatten())
         self.devices = devices if devices is not None else jax.devices()
         self.n_hosts = n_hosts
+        self.replicas = replicas
         self.interpret = interpret
         self._lock = threading.Lock()
+        # notified (under _lock) by every _swap — the condition wait_epoch()
+        # blocks on, so tests and drain loops need no sleep/poll
+        self._swap_cond = threading.Condition(self._lock)
         self._adopt_lock = threading.Lock()  # one ensemble build at a time
         # cold-start plan cache: batches with similar rating-count profiles
         # share padded plan shapes, so the fused fold-in solve never
@@ -255,7 +263,23 @@ class RecommendFrontend:
                 self.rebinds += int(rebound)
                 if t_publish is not None:
                     self.publish_to_swap_s.append(time.perf_counter() - t_publish)
+                self._swap_cond.notify_all()
         return True
+
+    def wait_epoch(self, epoch: int, timeout: float | None = None) -> bool:
+        """Block until the served epoch reaches `epoch`; True on success,
+        False on timeout. Condition-based (woken by every swap) — the
+        synchronization seam threaded tests use instead of sleep/poll."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._epoch is None or self._epoch < epoch:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                self._swap_cond.wait(remaining)
+            return True
 
     def _build_recommender(self, ensemble: PosteriorEnsemble):
         """Fresh recommender for `ensemble` (boot, or a shape-changing
@@ -273,8 +297,8 @@ class RecommendFrontend:
             if self.devices is not None and len(self.devices) >= self.n_hosts:
                 devices = list(self.devices)[: self.n_hosts]
             return ClusterCoordinator(
-                ensemble, n_hosts=self.n_hosts, devices=devices,
-                interpret=self.interpret,
+                ensemble, n_hosts=self.n_hosts, replicas=self.replicas,
+                devices=devices, interpret=self.interpret,
             )
         return TopNRecommender(
             ensemble, devices=self.devices, interpret=self.interpret
@@ -297,7 +321,12 @@ class RecommendFrontend:
             try:
                 self._adopt_snapshot(snap)
             except ValueError as e:
-                self.adopt_errors.append(e)
+                with self._lock:
+                    # recorded under the lock + notified so tests and
+                    # operators can condition-wait on a rejection instead
+                    # of polling the deque
+                    self.adopt_errors.append(e)
+                    self._swap_cond.notify_all()
                 rejected = snap.epoch
 
         while not self._stop.is_set():

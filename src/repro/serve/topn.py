@@ -107,10 +107,6 @@ class TopNRecommender(ClusterCoordinator):
 
     # -- flat-array accessors (compat with pre-tier callers) -------------
     @property
-    def n_shards(self) -> int:
-        return self.n_hosts
-
-    @property
     def u_flat(self) -> jax.Array:
         """(M, S*K) trained-user scoring rows (host 0's U replica — all
         replicas are identical by construction)."""

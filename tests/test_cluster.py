@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.checkpoint import as_retained_sample
 from repro.kernels import bpmf_topn
 from repro.serve import (
@@ -94,6 +95,66 @@ def test_shard_bounds_cover_and_balance():
     assert b[0] == 0 and b[-1] == 10
     widths = np.diff(b)
     assert widths.min() >= 2 and widths.max() <= 3
+
+
+# ---------------------------------------------------------------------------
+# property tests: the contracts hold for ARBITRARY shapes, not just the
+# parametrized grid above (skipped individually when hypothesis is absent)
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_merge_topk_bit_equal_under_arbitrary_splits(data):
+    """Property form of the merge contract: for ANY item count, ANY topk,
+    ANY split (uneven, ragged, empty shards included) and duplicate-heavy
+    scores, merging per-shard top_k candidates reproduces one monolithic
+    lax.top_k bit-for-bit — stability means every tie resolves to the
+    lowest global item index, exactly as unsharded top_k would."""
+    n_items = data.draw(st.integers(min_value=1, max_value=48), label="n_items")
+    topk = data.draw(st.integers(min_value=1, max_value=n_items), label="topk")
+    # a tiny value alphabet forces heavy cross-shard score collisions
+    flat = data.draw(
+        st.lists(st.integers(min_value=-3, max_value=3),
+                 min_size=3 * n_items, max_size=3 * n_items),
+        label="scores",
+    )
+    scores = jnp.asarray(np.asarray(flat, np.float32).reshape(3, n_items))
+    cuts = data.draw(
+        st.lists(st.integers(min_value=0, max_value=n_items), max_size=5),
+        label="cuts",
+    )
+    bounds = [0, *sorted(cuts), n_items]
+
+    want_v, want_i = jax.lax.top_k(scores, topk)
+    vals, idx = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi == lo:
+            continue  # empty shard: contributes no candidates
+        k_eff = min(topk, hi - lo)
+        v, pos = jax.lax.top_k(scores[:, lo:hi], k_eff)
+        vals.append(v)
+        idx.append(pos + np.int32(lo))
+    got_v, got_i = _merge_topk(
+        jnp.concatenate(vals, 1), jnp.concatenate(idx, 1), topk
+    )
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=2000),
+       st.integers(min_value=1, max_value=32))
+def test_shard_bounds_properties(n_items, n_shards):
+    """Coverage (first bound 0, last n_items, widths sum exactly — so the
+    half-open ranges tile the catalogue disjointly), monotonicity, and
+    balance (widths within one row) for arbitrary layouts, including more
+    shards than items (empty shards allowed, never negative)."""
+    b = shard_bounds(n_items, n_shards)
+    assert len(b) == n_shards + 1
+    assert b[0] == 0 and b[-1] == n_items
+    widths = np.diff(b)
+    assert (widths >= 0).all()
+    assert widths.sum() == n_items          # covers exactly once
+    assert widths.max() - widths.min() <= 1  # balanced to within one row
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +291,9 @@ def test_channel_fanout_commits_and_serves_consistently():
                 break
     finally:
         pub.join(timeout=20.0)
+        # the last publishes may still be mid-adoption: condition-wait for
+        # the final barrier instead of polling
+        assert cluster.wait_epoch(29, timeout=20.0)
         cluster.close()
 
     assert cluster.epoch == 29
@@ -246,9 +310,7 @@ def test_shape_change_publish_reshards_all_hosts():
     )
     assert cluster.ensemble.shape_key()[0] == 1
     ch.publish(2, epoch_coded_sample(2))  # window grows: S 1 -> 2
-    deadline = time.monotonic() + 20.0
-    while cluster.epoch < 2 and time.monotonic() < deadline:
-        time.sleep(0.005)
+    assert cluster.wait_epoch(2, timeout=20.0)  # condition wait, no polling
     cluster.close()
     assert cluster.epoch == 2
     assert cluster.reshards == 1 and cluster.commits == 0
@@ -328,9 +390,7 @@ def test_cluster_freshness_clock_records_barrier_latency():
     )
     for step in (2, 3):
         ch.publish(step, epoch_coded_sample(step))
-        deadline = time.monotonic() + 20.0
-        while cluster.epoch < step and time.monotonic() < deadline:
-            time.sleep(0.002)
+        assert cluster.wait_epoch(step, timeout=20.0)
     cluster.close()
     fresh = cluster.freshness_percentiles()
     assert cluster.commits == 2

@@ -168,6 +168,7 @@ def test_int8_compressed_psum_error_feedback():
     out = run_sub("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.optim.compress import compress_init, compressed_psum, CompressState
 
     mesh = jax.make_mesh((8,), ("pod",))
@@ -177,8 +178,8 @@ def test_int8_compressed_psum_error_feedback():
         out, st = compressed_psum({"w": g[0]}, CompressState(error={"w": err[0]}), "pod")
         return out["w"][None], st.error["w"][None]
 
-    m = jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                      out_specs=(P("pod"), P("pod")), check_vma=False)
+    m = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                  out_specs=(P("pod"), P("pod")), check_vma=False)
     errs = np.zeros_like(g_global)
     # accumulate over rounds: error feedback keeps the running sum unbiased
     total_true = g_global.sum(0)

@@ -330,10 +330,9 @@ def test_subscriber_hammer_publishes_while_draining():
         for t in threads:
             t.join(timeout=20.0)
         ch.close()
-    # the drain path must catch the last published epoch
-    deadline = time.monotonic() + 20.0
-    while fe.epoch < ch.epoch and time.monotonic() < deadline:
-        time.sleep(0.005)
+    # the drain path must catch the last published epoch: condition-wait on
+    # the swap (woken by every adoption), no sleep/poll race
+    assert fe.wait_epoch(ch.epoch, timeout=20.0)
     fe.close()
     assert fe.epoch == ch.epoch == 119
     assert epochs == sorted(epochs)
@@ -417,14 +416,14 @@ def test_subscriber_survives_rejected_publish():
                            max_batch=4)
     try:
         ch.publish(2, _sized_sample(2, M - 4, N))   # rejected: shrunk axes
-        deadline = time.monotonic() + 20.0
-        while not fe.adopt_errors and time.monotonic() < deadline:
-            time.sleep(0.005)
-        assert fe.adopt_errors and fe.epoch == 1
+        # the subscriber notifies the swap condition on a rejection too —
+        # wait on it rather than polling the deque
+        with fe._lock:
+            assert fe._swap_cond.wait_for(lambda: len(fe.adopt_errors) > 0,
+                                          timeout=20.0)
+        assert fe.epoch == 1
         ch.publish(3, _sized_sample(3, M, N))        # good again
-        while fe.epoch < 3 and time.monotonic() < deadline:
-            time.sleep(0.005)
-        assert fe.epoch == 3  # the loop lived on and adopted it
+        assert fe.wait_epoch(3, timeout=20.0)  # the loop lived on
     finally:
         ch.close()
         fe.close()
