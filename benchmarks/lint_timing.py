@@ -1,0 +1,44 @@
+"""repro-lint analyzer throughput over the live tree.
+
+The lint job is blocking in CI, so its cost is part of every push's
+latency budget — this suite tracks it the same way the kernel suites
+track theirs. One full `analyze_paths` pass over ``src`` and ``tests``
+(all four rule passes), timed end to end including parsing:
+
+    repro_lint,<us per file>,files=<n>;findings=<m>;total_ms=<t>
+
+Smoke mode runs one pass (it is already ~1 s); the full mode runs three
+and reports the best, so the row is stable against filesystem-cache noise.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from benchmarks.common import REPO_ROOT
+
+
+def main(smoke: bool = False):
+    from repro.analysis import analyze_paths
+    from repro.analysis.cli import discover
+
+    paths = [REPO_ROOT / "src", REPO_ROOT / "tests"]
+    n_files = len(discover(paths))
+    reps = 1 if smoke else 3
+    best_s = float("inf")
+    findings: list = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        findings, errors = analyze_paths(paths, REPO_ROOT)
+        best_s = min(best_s, time.perf_counter() - t0)
+        if errors:
+            raise RuntimeError(f"repro-lint parse errors: {errors}")
+    us_per_file = best_s * 1e6 / max(n_files, 1)
+    derived = (f"files={n_files};findings={len(findings)};"
+               f"total_ms={best_s * 1e3:.1f}")
+    yield f"repro_lint,{us_per_file:.1f},{derived}"
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -17,6 +17,7 @@ Figures:
   publish  publish-to-fresh-recommendation latency, push channel vs disk poll
   foldin  cold-start fold-in: fused (S*B) solve vs per-draw loop, plan cache
   sweep  training-sweep engines: reference vs restructured vs fused
+  lint   repro-lint analyzer throughput over the live tree (the CI gate)
 """
 from __future__ import annotations
 
@@ -27,9 +28,16 @@ import traceback
 def main(argv: list[str] | None = None) -> None:
     import argparse
 
-    from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
-    from benchmarks import foldin_latency, publish_latency, rmse_table
-    from benchmarks import roofline, serve_cluster, serve_topn, sweep_throughput
+    try:
+        from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
+    except ImportError:  # script-mode (`python benchmarks/run.py`): put repo root on path
+        import pathlib
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+        from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
+    from benchmarks import foldin_latency, lint_timing, publish_latency
+    from benchmarks import rmse_table, roofline, serve_cluster, serve_topn
+    from benchmarks import sweep_throughput
     from benchmarks.common import append_history_row, parse_csv_row, write_bench_json
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -62,6 +70,8 @@ def main(argv: list[str] | None = None) -> None:
         ("publish", publish_latency.main, False, None),
         ("foldin", foldin_latency.main, False,
          lambda: foldin_latency.main(smoke=True)),
+        ("lint", lint_timing.main, False,
+         lambda: lint_timing.main(smoke=True)),
     ]
     print("name,us_per_call,derived")
     failures = 0

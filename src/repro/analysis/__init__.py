@@ -1,0 +1,34 @@
+"""repro-lint: repo-custom static analysis for the concurrency and
+retrace invariants the async serving/training stack depends on.
+
+Four stdlib-`ast` passes (no runtime deps — the analyzer never imports the
+code it checks):
+
+* ``locks``   — lock discipline: inferred guarded-field sets, the
+  ``*_locked`` calling convention, re-acquisition deadlocks.
+* ``retrace`` — jit retrace hazards: Python branches on traced args,
+  malformed/unhashable statics, concretizing shape leaks.
+* ``syncs``   — device dispatch/sync under a coordinator lock.
+* ``prng``    — PRNG key reuse without an intervening split.
+
+CLI: ``python -m repro.analysis [paths...]`` (see `repro.analysis.cli`).
+Docs: ``docs/concurrency.md`` — rule catalogue, suppression & baseline
+workflow, and the runtime cross-check (`serve.faults.assert_holds`).
+"""
+from repro.analysis.cli import ALL_RULES, RULE_DOCS, analyze_paths, main
+from repro.analysis.common import Finding, SourceFile
+
+__all__ = ["ALL_RULES", "RULE_DOCS", "Finding", "SourceFile",
+           "analyze_paths", "analyze_source", "main"]
+
+
+def analyze_source(code: str, rules=None, filename: str = "<snippet>"):
+    """Analyze a source string — the fixture seam tests/test_analysis.py
+    uses. Returns unsuppressed findings sorted by position."""
+    from pathlib import Path
+
+    from repro.analysis.cli import analyze_file
+
+    sf = SourceFile(Path(filename), filename, code)
+    ruleset = frozenset(rules) if rules is not None else frozenset(ALL_RULES)
+    return [f for f, _ in analyze_file(sf, ruleset)]

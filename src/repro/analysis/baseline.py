@@ -1,0 +1,68 @@
+"""Baseline file handling: grandfather existing findings, gate new ones.
+
+The baseline (checked in as ``.repro-lint-baseline.json``) maps a stable
+finding key to an occurrence count.  The key is
+``path::rule::scope::normalized-source-line`` — no line numbers, so
+unrelated edits that shift a grandfathered finding up or down do not
+resurrect it, while *changing the flagged line itself* (or moving it to a
+new scope) does.  A count accommodates N identical lines in one scope.
+
+Workflow: fix every finding you can; suppress intentional ones in-line
+(``# repro-lint: disable=<rule>`` with a justification); only what remains
+goes in the baseline via ``python -m repro.analysis --write-baseline``.
+New findings against a checked-in baseline fail CI.  Stale entries (the
+finding disappeared) are reported as a warning so the file shrinks over
+time instead of fossilizing.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+from repro.analysis.common import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = ".repro-lint-baseline.json"
+
+
+def load(path: Path) -> Counter:
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"unsupported baseline version {data.get('version')!r} in {path}"
+        )
+    return Counter({str(k): int(v) for k, v in data["findings"].items()})
+
+
+def save(path: Path, keys: Counter) -> None:
+    payload = {
+        "version": BASELINE_VERSION,
+        "comment": (
+            "grandfathered repro-lint findings; see docs/concurrency.md — "
+            "regenerate with: python -m repro.analysis --write-baseline"
+        ),
+        "findings": {k: keys[k] for k in sorted(keys)},
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=False) + "\n")
+
+
+def apply(findings: list[tuple[Finding, str]], baseline: Counter
+          ) -> tuple[list[Finding], int, list[str]]:
+    """Split findings into (new, n_suppressed, stale_keys).
+
+    `findings` pairs each Finding with its baseline key.  Up to the
+    baselined count of each key is suppressed; the rest are new.  Keys in
+    the baseline with no remaining occurrence are stale.
+    """
+    budget = Counter(baseline)
+    new: list[Finding] = []
+    suppressed = 0
+    for f, key in findings:
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            suppressed += 1
+        else:
+            new.append(f)
+    stale = sorted(k for k, n in budget.items() if n > 0)
+    return new, suppressed, stale

@@ -1,0 +1,179 @@
+"""repro-lint CLI: `python -m repro.analysis [paths...]`.
+
+Runs the four AST passes (lock discipline, retrace hazards, device-sync-
+under-lock, PRNG discipline) over the given files/directories (default:
+``src tests``), applies per-line suppressions and the checked-in baseline,
+and exits non-zero on any new finding — the blocking CI gate.
+
+    python -m repro.analysis src tests                 # text output
+    python -m repro.analysis --format json src tests   # machine-readable
+    python -m repro.analysis --write-baseline          # grandfather current
+    python -m repro.analysis --list-rules              # rule catalogue
+
+Exit codes: 0 clean (modulo baseline), 1 new findings, 2 usage/parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import Counter
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import locks, prng, retrace, syncs
+from repro.analysis.common import Finding, SourceFile
+
+PASSES = (locks, retrace, syncs, prng)
+
+RULE_DOCS = {
+    "guarded-field": "read/write of a lock-guarded attribute outside the lock",
+    "locked-call": "*_locked method called without holding self._lock",
+    "lock-reacquire": "*_locked method re-acquires its own non-reentrant lock",
+    "traced-branch": "jit body branches/iterates in Python on a traced arg",
+    "shape-leak": "int()/float()/f-string concretizes a traced arg in a jit body",
+    "static-args": "malformed or unhashable static_argnums/static_argnames",
+    "sync-under-lock": "device dispatch/sync while holding a coordinator lock",
+    "prng-reuse": "PRNG key consumed twice without an intervening split",
+}
+
+ALL_RULES = tuple(RULE_DOCS)
+
+
+def discover(paths: list[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def analyze_file(sf: SourceFile, rules: frozenset[str]
+                 ) -> list[tuple[Finding, str]]:
+    """All unsuppressed findings for one parsed file, paired with their
+    baseline keys and sorted by position."""
+    out: list[tuple[Finding, str]] = []
+    for pass_mod in PASSES:
+        if not rules & frozenset(pass_mod.RULES):
+            continue
+        for f in pass_mod.run(sf):
+            if f.rule not in rules:
+                continue
+            if sf.suppressed(f.line, f.rule):
+                continue
+            out.append((f, f.baseline_key(sf.source_line(f.line))))
+    out.sort(key=lambda fk: fk[0].sort_key())
+    return out
+
+
+def analyze_paths(paths: list[Path], root: Path,
+                  rules: frozenset[str] = frozenset(ALL_RULES),
+                  ) -> tuple[list[tuple[Finding, str]], list[str]]:
+    """(findings-with-keys, parse_errors) over every .py under `paths`."""
+    findings: list[tuple[Finding, str]] = []
+    errors: list[str] = []
+    for path in discover(paths):
+        try:
+            sf = SourceFile.load(path, root)
+        except SyntaxError as e:
+            errors.append(f"{path}: {e.msg} (line {e.lineno})")
+            continue
+        findings.extend(analyze_file(sf, rules))
+    return findings, errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to analyze (default: src tests)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: ./{baseline_mod.DEFAULT_BASELINE} "
+                         "when it exists)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record every current finding as grandfathered and exit 0")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset to run")
+    ap.add_argument("--root", default=".",
+                    help="paths in output/baseline are relative to this")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, doc in RULE_DOCS.items():
+            print(f"{rule:16s} {doc}")
+        return 0
+
+    rules = frozenset(ALL_RULES)
+    if args.rules:
+        rules = frozenset(r.strip() for r in args.rules.split(",") if r.strip())
+        unknown = rules - frozenset(ALL_RULES)
+        if unknown:
+            print(f"unknown rules: {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    root = Path(args.root)
+    paths = [Path(p) for p in (args.paths or ["src", "tests"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"no such path: {', '.join(map(str, missing))}", file=sys.stderr)
+        return 2
+
+    t0 = time.perf_counter()
+    findings, errors = analyze_paths(paths, root, rules)
+    elapsed = time.perf_counter() - t0
+
+    baseline_path = Path(args.baseline) if args.baseline else (
+        root / baseline_mod.DEFAULT_BASELINE)
+    if args.write_baseline:
+        baseline_mod.save(baseline_path, Counter(k for _, k in findings))
+        print(f"wrote {len(findings)} grandfathered finding(s) -> "
+              f"{baseline_path}")
+        return 0
+
+    base = Counter()
+    if baseline_path.exists():
+        try:
+            base = baseline_mod.load(baseline_path)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"bad baseline {baseline_path}: {e}", file=sys.stderr)
+            return 2
+    new, suppressed, stale = baseline_mod.apply(findings, base)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) for f in new],
+            "summary": dict(Counter(f.rule for f in new)),
+            "baseline": {"suppressed": suppressed, "stale": stale},
+            "parse_errors": errors,
+            "files_analyzed": len(discover(paths)),
+            "elapsed_s": round(elapsed, 4),
+        }, indent=1))
+    else:
+        for f in new:
+            print(f.render())
+        for e in errors:
+            print(f"PARSE ERROR {e}", file=sys.stderr)
+        if stale:
+            print(f"note: {len(stale)} stale baseline entr"
+                  f"{'y' if len(stale) == 1 else 'ies'} (finding fixed — "
+                  "regenerate with --write-baseline to shrink the file)",
+                  file=sys.stderr)
+        print(f"repro-lint: {len(new)} new finding(s), {suppressed} "
+              f"baselined, {len(discover(paths))} files in {elapsed:.2f}s",
+              file=sys.stderr)
+    if errors:
+        return 2
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,280 @@
+"""Pass 4 — PRNG key discipline (``prng-reuse``).
+
+BPMF's correctness story leans on its key ledger: the fused fold-in
+pre-draws noise "with the loop's key sequence so sampling matches
+bit-for-bit", and the distributed parity tests pin exact random bits.
+Reusing a consumed key silently correlates draws that the math assumes
+independent — no test fails, the posterior is just wrong.
+
+The rule: a key variable passed to two *consuming* calls without an
+intervening `split`/reassignment is flagged.  Consuming = any call that
+receives the key as an argument (samplers, `jax.random.split` itself,
+helper functions taking a key) — except `jax.random.fold_in`, which
+derives without consuming (the per-item `vmap(fold_in)` pattern in
+core/distributed.py is the sanctioned way to fan one key out), and
+argument-checking helpers (`_check*`/`assert*`/`validate*`), which
+inspect the key without drawing from it.
+
+Key variables are tracked by provenance (assigned from `PRNGKey` / `key` /
+`split` / `fold_in`, including tuple unpacking of `split`) and by naming
+convention for function parameters (`key`, `rng`, `*_key`).
+
+Control flow is approximated abstractly: `if`/`else` branches are analyzed
+independently and merged consumed-if-either (consumption in one arm taints
+later straight-line use, but sibling arms never flag each other; an arm
+that ends in `return`/`raise` is excluded from the merge — its
+consumptions never reach the fall-through code); loop and
+comprehension bodies are analyzed twice, so a consumption that survives its
+own iteration (`for _ in ...: normal(key)`) is caught while the idiomatic
+`key, k = split(key)`-per-iteration ledger stays clean.  Nested `def`s are
+separate scopes; lambdas passed to `vmap` get their own parameter state.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, SourceFile, call_name, scope_of
+
+RULES = ("prng-reuse",)
+
+_PRODUCERS = ("random.PRNGKey", "random.key", "random.split",
+              "random.fold_in", "random.wrap_key_data", "random.clone")
+_NONCONSUMING = ("random.fold_in", "random.key_data", "random.clone")
+_IGNORED_CALLEES = {"print", "repr", "str", "id", "len", "type", "hash",
+                    "isinstance"}
+_PARAM_NAMES = {"key", "rng", "prng", "prng_key", "rng_key"}
+
+FRESH, CONSUMED = "fresh", "consumed"
+
+
+def _is_producer(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    return name is not None and name.endswith(_PRODUCERS)
+
+
+def _is_key_param(name: str) -> bool:
+    return name in _PARAM_NAMES or name.endswith("_key")
+
+
+def _is_validator(name: str) -> bool:
+    """Argument-checking helpers (`_check_fold_in_args(key, ...)`) inspect
+    the key without drawing from it."""
+    leaf = name.rsplit(".", 1)[-1].lstrip("_")
+    return leaf.startswith(("check", "assert", "validate", "verify"))
+
+
+def _terminates(stmts: list[ast.stmt]) -> bool:
+    """True when a block can never fall through to the statement after it."""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue)
+    )
+
+
+class _ScopeState:
+    def __init__(self):
+        # var -> (state, line-of-consumption)
+        self.keys: dict[str, tuple[str, int]] = {}
+
+    def copy(self) -> "_ScopeState":
+        s = _ScopeState()
+        s.keys = dict(self.keys)
+        return s
+
+    def merge(self, *others: "_ScopeState") -> None:
+        for other in others:
+            for var, (st, line) in other.keys.items():
+                cur = self.keys.get(var)
+                if cur is None or (st == CONSUMED and cur[0] == FRESH):
+                    self.keys[var] = (st, line)
+
+
+class _FunctionAnalyzer:
+    def __init__(self, sf: SourceFile, func, scope: str,
+                 findings: list[Finding]):
+        self.sf = sf
+        self.func = func
+        self.scope = scope
+        self.findings = findings
+        self.seen: set[tuple[int, str]] = set()
+
+    def analyze(self) -> None:
+        state = _ScopeState()
+        args = self.func.args
+        for p in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            if _is_key_param(p.arg):
+                state.keys[p.arg] = (FRESH, p.lineno)
+        if isinstance(self.func, ast.Lambda):
+            self._visit_expr(self.func.body, state)
+        else:
+            self._visit_block(self.func.body, state)
+
+    # -- statements ----------------------------------------------------
+    def _visit_block(self, stmts, state: _ScopeState) -> None:
+        for stmt in stmts:
+            self._visit_stmt(stmt, state)
+
+    def _visit_stmt(self, stmt: ast.stmt, state: _ScopeState) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _FunctionAnalyzer(
+                self.sf, stmt, f"{self.scope}.{stmt.name}".lstrip("."),
+                self.findings,
+            ).analyze()
+            return
+        if isinstance(stmt, ast.ClassDef):
+            run_on_scope(self.sf, stmt, self.scope, self.findings)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._visit_expr(value, state)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            self._assign(targets, value, state)
+            return
+        if isinstance(stmt, ast.If):
+            self._visit_expr(stmt.test, state)
+            body_state = state.copy()
+            else_state = state.copy()
+            self._visit_block(stmt.body, body_state)
+            self._visit_block(stmt.orelse, else_state)
+            # only fall-through arms flow into the post-If state: an arm
+            # ending in return/raise never reaches the code after the If,
+            # so its consumptions are mutually exclusive with later use
+            # (the `if mode == "async": ... return` pattern in
+            # core/distributed.py)
+            live = [s for s, arm in ((body_state, stmt.body),
+                                     (else_state, stmt.orelse))
+                    if not _terminates(arm)]
+            if live:
+                state.keys = {}
+                state.merge(*live)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_expr(stmt.iter, state)
+            # two abstract iterations: catches loop-carried reuse while a
+            # per-iteration split keeps the ledger clean
+            for _ in range(2):
+                self._visit_block(stmt.body, state)
+            self._visit_block(stmt.orelse, state)
+            return
+        if isinstance(stmt, ast.While):
+            for _ in range(2):
+                self._visit_expr(stmt.test, state)
+                self._visit_block(stmt.body, state)
+            self._visit_block(stmt.orelse, state)
+            return
+        if isinstance(stmt, ast.Try):
+            body_state = state.copy()
+            self._visit_block(stmt.body, body_state)
+            merged = [body_state]
+            for handler in stmt.handlers:
+                h_state = state.copy()
+                self._visit_block(handler.body, h_state)
+                merged.append(h_state)
+            state.keys = {}
+            state.merge(*merged)
+            self._visit_block(stmt.orelse, state)
+            self._visit_block(stmt.finalbody, state)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._visit_expr(item.context_expr, state)
+            self._visit_block(stmt.body, state)
+            return
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._visit_expr(child, state)
+            elif isinstance(child, ast.stmt):
+                self._visit_stmt(child, state)
+
+    def _assign(self, targets, value, state: _ScopeState) -> None:
+        produced = value is not None and _is_producer(value)
+        # a key-ish NAME bound to some other call's result is not a key we
+        # can reason about: `rng = np.random.default_rng(0)` is a *stateful*
+        # generator (reuse is the point), `key = make_key(...)` is opaque.
+        # Name-convention tracking only applies to non-call values
+        # (`key = state.key` — reading a stored key) and parameters.
+        opaque_call = isinstance(value, ast.Call) and not produced
+        for tgt in targets:
+            names = []
+            if isinstance(tgt, ast.Name):
+                names = [tgt.id]
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                names = [e.id for e in tgt.elts if isinstance(e, ast.Name)]
+            for n in names:
+                if produced or (_is_key_param(n) and not opaque_call):
+                    state.keys[n] = (FRESH, tgt.lineno)
+                elif n in state.keys:
+                    del state.keys[n]  # rebound to a non-key value
+
+    # -- expressions ---------------------------------------------------
+    def _visit_expr(self, expr: ast.expr, state: _ScopeState) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Lambda):
+                _FunctionAnalyzer(self.sf, node, self.scope,
+                                  self.findings).analyze()
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                # the element expr runs once per iteration
+                elts = ([node.key, node.value]
+                        if isinstance(node, ast.DictComp) else [node.elt])
+                for elt in elts:
+                    for sub in ast.walk(elt):
+                        if isinstance(sub, ast.Call):
+                            self._consume_call(sub, state, repeat=True)
+            elif isinstance(node, ast.Call):
+                self._consume_call(node, state)
+
+    def _consume_call(self, node: ast.Call, state: _ScopeState,
+                      repeat: bool = False) -> None:
+        name = call_name(node)
+        if name is not None:
+            if (name.endswith(_NONCONSUMING) or name in _IGNORED_CALLEES
+                    or _is_validator(name)):
+                return
+        key_args = []
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in state.keys:
+                key_args.append(arg)
+        for arg in key_args:
+            st, line = state.keys[arg.id]
+            if st == CONSUMED or repeat:
+                self._flag(arg, line)
+            state.keys[arg.id] = (CONSUMED, arg.lineno)
+        if repeat:
+            # inside a comprehension, even a first consumption repeats
+            return
+
+    def _flag(self, arg: ast.Name, prev_line: int) -> None:
+        dedup = (arg.lineno, arg.id)
+        if dedup in self.seen:
+            return
+        self.seen.add(dedup)
+        self.findings.append(Finding(
+            path=self.sf.rel, line=arg.lineno, col=arg.col_offset,
+            rule="prng-reuse", scope=self.scope,
+            message=(
+                f"PRNG key '{arg.id}' (consumed near line {prev_line}) is "
+                "passed to another sampling call without an intervening "
+                "split — draws will be correlated"
+            ),
+        ))
+
+
+def run_on_scope(sf: SourceFile, node: ast.AST, prefix: str,
+                 findings: list[Finding]) -> None:
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scope = f"{prefix}.{child.name}".lstrip(".")
+            _FunctionAnalyzer(sf, child, scope, findings).analyze()
+        elif isinstance(child, ast.ClassDef):
+            run_on_scope(sf, child, f"{prefix}.{child.name}".lstrip("."),
+                         findings)
+
+
+def run(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    run_on_scope(sf, sf.tree, "", findings)
+    return findings

@@ -1,0 +1,426 @@
+"""Pass 2 — retrace hazards in jit-compiled functions.
+
+The serving tier's latency model rests on `trace_count()`-pinned kernels:
+a publish must cost a buffer swap, never a recompile.  The hazards that
+silently defeat that pinning are all visible in the AST:
+
+``traced-branch``
+    A `jit`-compiled function whose body branches *in Python* (`if` /
+    `while` / `for` / ternary / `assert`) on a traced argument.  At best
+    the branch bakes one path per concrete value into the cache (a retrace
+    per distinct value); at worst it raises ConcretizationTypeError in
+    production.  Static arguments (`static_argnums` / `static_argnames`),
+    `x is None` checks (resolved at trace time), shape/dtype attribute
+    tests (`x.shape[0] > 0`, `len(x)` — static under tracing), and params
+    annotated as pytree containers (`arrays: tuple` — the structure is part
+    of the cache key, only leaves are tracers) are exempt.
+
+``shape-leak``
+    `int(...)` / `float(...)` / `bool(...)` or an f-string applied to a
+    traced argument inside a jit body: each concretizes the tracer, which
+    forces a device sync at best and keys the jit cache on the *value* at
+    worst.  Shape/dtype projections stay exempt as above.
+
+``static-args``
+    `static_argnums` that is not a literal int/tuple-of-ints,
+    `static_argnames` naming a parameter the function does not have (the
+    argument silently stays traced — the pin never existed), and same-file
+    call sites that pass a list/dict/set literal or an `np.*`/`jnp.*` array
+    expression in a static position (unhashable → TypeError, or a cache
+    entry per array object).
+
+jit roots recognized: `@jax.jit` / `@functools.partial(jax.jit, ...)`
+decorators, `f = jax.jit(g, ...)` module/method assignments (including the
+`self._sweep = jax.jit(self._sweep_impl)` bound-method idiom — `self` is
+closure state there, not a traced arg), and `jax.jit(lambda ...: ...)`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import (
+    Finding,
+    SourceFile,
+    call_name,
+    dotted_name,
+    scope_of,
+    self_attr,
+)
+
+RULES = ("traced-branch", "shape-leak", "static-args")
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval"}
+# container-annotated params are pytrees whose STRUCTURE is part of the jit
+# cache key: iterating / truth-testing / len()-ing them is resolved at trace
+# time (only the leaves are tracers) — `arrays: tuple` in serve/foldin.py
+_CONTAINER_ANNOTS = {"tuple", "list", "dict", "Tuple", "List", "Dict",
+                     "Sequence", "Mapping", "FrozenSet", "frozenset"}
+_SHAPE_SAFE_CALLS = {"len", "isinstance", "type", "callable", "hasattr",
+                     "getattr"}
+_CONCRETIZERS = {"int", "float", "bool", "complex"}
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and call_name(node) in _JIT_NAMES)
+
+
+def _partial_jit(deco: ast.AST) -> ast.Call | None:
+    """`functools.partial(jax.jit, ...)` → the partial Call node."""
+    if (isinstance(deco, ast.Call)
+            and call_name(deco) in ("functools.partial", "partial")
+            and deco.args and dotted_name(deco.args[0]) in _JIT_NAMES):
+        return deco
+    return None
+
+
+def _const_str_tuple(node: ast.AST) -> list[str] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return out
+    return None
+
+
+def _const_int_tuple(node: ast.AST) -> list[int] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, int)):
+                return None
+            out.append(elt.value)
+        return out
+    return None
+
+
+def _param_names(func: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+                 ) -> list[str]:
+    a = func.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class _JitSite:
+    """One jit-compiled function to analyze."""
+
+    def __init__(self, func, statics: set[str], jit_call: ast.Call | None,
+                 alias: str | None, bound_self: bool):
+        self.func = func            # FunctionDef / Lambda
+        self.statics = statics      # static param names
+        self.jit_call = jit_call    # the jax.jit(...) call node, if any
+        self.alias = alias          # name call sites use, for static-args
+        self.bound_self = bound_self
+
+
+def _statics_from_kwargs(kwargs: list[ast.keyword],
+                         func, sf: SourceFile,
+                         findings: list[Finding]) -> set[str]:
+    """static param names from static_argnums/static_argnames keywords,
+    emitting `static-args` findings for malformed specs."""
+    params = _param_names(func) if func is not None else []
+    statics: set[str] = set()
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            names = _const_str_tuple(kw.value)
+            if names is None:
+                continue
+            for n in names:
+                if func is not None and n not in params:
+                    findings.append(Finding(
+                        path=sf.rel, line=kw.value.lineno,
+                        col=kw.value.col_offset, rule="static-args",
+                        scope=scope_of(sf, kw.value),
+                        message=(f"static_argnames entry '{n}' is not a "
+                                 "parameter — the argument stays traced"),
+                    ))
+                statics.add(n)
+        elif kw.arg == "static_argnums":
+            nums = _const_int_tuple(kw.value)
+            if nums is None:
+                findings.append(Finding(
+                    path=sf.rel, line=kw.value.lineno,
+                    col=kw.value.col_offset, rule="static-args",
+                    scope=scope_of(sf, kw.value),
+                    message=("static_argnums must be a literal int or "
+                             "tuple of ints (a computed/array value cannot "
+                             "pin anything)"),
+                ))
+                continue
+            for i in nums:
+                if func is None:
+                    continue
+                if 0 <= i < len(params):
+                    statics.add(params[i])
+                else:
+                    findings.append(Finding(
+                        path=sf.rel, line=kw.value.lineno,
+                        col=kw.value.col_offset, rule="static-args",
+                        scope=scope_of(sf, kw.value),
+                        message=(f"static_argnums index {i} is out of range "
+                                 f"for a {len(params)}-parameter function"),
+                    ))
+    return statics
+
+
+def _collect_sites(sf: SourceFile, findings: list[Finding]) -> list[_JitSite]:
+    sites: list[_JitSite] = []
+    class_methods: dict[str, dict[str, ast.FunctionDef]] = {}
+    module_funcs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef):
+            class_methods[node.name] = {
+                m.name: m for m in node.body
+                if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            module_funcs.setdefault(node.name, node)
+
+    # decorator form
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for deco in node.decorator_list:
+            if dotted_name(deco) in _JIT_NAMES:
+                sites.append(_JitSite(node, set(), None, node.name, False))
+            elif _is_jit_call(deco):
+                statics = _statics_from_kwargs(
+                    deco.keywords, node, sf, findings)
+                sites.append(_JitSite(node, statics, deco, node.name, False))
+            elif (p := _partial_jit(deco)) is not None:
+                statics = _statics_from_kwargs(p.keywords, node, sf, findings)
+                sites.append(_JitSite(node, statics, p, node.name, False))
+
+    # assignment form: name = jax.jit(target, ...)
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Assign) and _is_jit_call(node.value)):
+            continue
+        call = node.value
+        if not call.args:
+            continue
+        target_expr = call.args[0]
+        alias = None
+        if len(node.targets) == 1:
+            alias = (self_attr(node.targets[0])
+                     or dotted_name(node.targets[0]))
+        func = None
+        bound_self = False
+        if isinstance(target_expr, ast.Lambda):
+            func = target_expr
+        elif (attr := self_attr(target_expr)) is not None:
+            # self._impl: resolve within the lexically enclosing class
+            cur = sf.parent(node)
+            while cur is not None and not isinstance(cur, ast.ClassDef):
+                cur = sf.parent(cur)
+            if cur is not None:
+                func = class_methods.get(cur.name, {}).get(attr)
+                bound_self = func is not None
+        elif (name := dotted_name(target_expr)) is not None:
+            func = module_funcs.get(name)
+        if func is None:
+            continue
+        statics = _statics_from_kwargs(call.keywords, func, sf, findings)
+        if bound_self:
+            statics.add("self")
+        sites.append(_JitSite(func, statics, call, alias, bound_self))
+    return sites
+
+
+def _container_params(func) -> set[str]:
+    """Params annotated as pytree containers (`arrays: tuple`) — their
+    structure is trace-time static."""
+    out: set[str] = set()
+    a = func.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        ann = getattr(p, "annotation", None)
+        if ann is None:
+            continue
+        base = ann.value if isinstance(ann, ast.Subscript) else ann
+        name = dotted_name(base)
+        if name is not None and name.rsplit(".", 1)[-1] in _CONTAINER_ANNOTS:
+            out.add(p.arg)
+    return out
+
+
+def _traced_params(site: _JitSite) -> set[str]:
+    params = set(_param_names(site.func))
+    params.discard("self")
+    return params - site.statics - _container_params(site.func)
+
+
+def _hazard_names(sf: SourceFile, expr: ast.AST, traced: set[str]
+                  ) -> list[ast.Name]:
+    """Traced-param Name loads in `expr` that are NOT behind a static
+    projection (`.shape` etc.), a `len()`-style static call, or an
+    `is None` check."""
+    out: list[ast.Name] = []
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id in traced):
+            continue
+        safe = False
+        cur = node
+        parent = sf.parent(cur)
+        # climb to (and including) `expr` — the test may itself be the
+        # exempting node, e.g. `if y is None:` where expr IS the Compare
+        while parent is not None:
+            if (isinstance(parent, ast.Attribute)
+                    and parent.attr in _STATIC_ATTRS):
+                safe = True
+                break
+            if (isinstance(parent, ast.Call)
+                    and call_name(parent) in _SHAPE_SAFE_CALLS):
+                safe = True
+                break
+            if isinstance(parent, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot))
+                for op in parent.ops
+            ):
+                safe = True
+                break
+            if parent is expr:
+                break
+            cur = parent
+            parent = sf.parent(cur)
+        if not safe:
+            out.append(node)
+    return out
+
+
+def _check_body(sf: SourceFile, site: _JitSite, findings: list[Finding]):
+    traced = _traced_params(site)
+    if not traced:
+        return
+    body = site.func.body
+    nodes = (ast.walk(site.func) if not isinstance(body, list)
+             else (n for stmt in body for n in ast.walk(stmt)))
+    scope = None
+    for node in nodes:
+        tests: list[tuple[ast.AST, str]] = []
+        if isinstance(node, (ast.If, ast.While)):
+            tests.append((node.test, "branches in Python on"))
+        elif isinstance(node, ast.IfExp):
+            tests.append((node.test, "branches (ternary) in Python on"))
+        elif isinstance(node, ast.Assert):
+            tests.append((node.test, "asserts in Python on"))
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            tests.append((node.iter, "iterates in Python over"))
+        for test, verb in tests:
+            for nm in _hazard_names(sf, test, traced):
+                if scope is None:
+                    scope = scope_of(sf, node)
+                findings.append(Finding(
+                    path=sf.rel, line=test.lineno, col=test.col_offset,
+                    rule="traced-branch", scope=scope,
+                    message=(
+                        f"jit-compiled function {verb} traced argument "
+                        f"'{nm.id}' — one retrace per concrete value (mark "
+                        "it static or use lax.cond/select)"
+                    ),
+                ))
+        # shape-leak: concretizing calls and f-strings
+        if (isinstance(node, ast.Call)
+                and call_name(node) in _CONCRETIZERS and node.args):
+            for nm in _hazard_names(sf, node.args[0], traced):
+                findings.append(Finding(
+                    path=sf.rel, line=node.lineno, col=node.col_offset,
+                    rule="shape-leak", scope=scope_of(sf, node),
+                    message=(
+                        f"{call_name(node)}(...) concretizes traced "
+                        f"argument '{nm.id}' inside a jit body — device "
+                        "sync + value-keyed retrace"
+                    ),
+                ))
+        if isinstance(node, ast.JoinedStr):
+            for part in node.values:
+                if not isinstance(part, ast.FormattedValue):
+                    continue
+                for nm in _hazard_names(sf, part.value, traced):
+                    findings.append(Finding(
+                        path=sf.rel, line=node.lineno, col=node.col_offset,
+                        rule="shape-leak", scope=scope_of(sf, node),
+                        message=(
+                            f"f-string formats traced argument '{nm.id}' "
+                            "inside a jit body — concretization / retrace "
+                            "hazard"
+                        ),
+                    ))
+
+
+def _is_unhashable_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name is not None and (name.startswith("np.")
+                                 or name.startswith("jnp.")
+                                 or name.startswith("numpy.")
+                                 or name.startswith("jax.numpy.")):
+            return True
+    return False
+
+
+def _check_call_sites(sf: SourceFile, site: _JitSite,
+                      findings: list[Finding]):
+    """Same-file calls passing unhashable/array expressions in static
+    positions."""
+    if site.alias is None or not site.statics or site.func is None:
+        return
+    if isinstance(site.func, ast.Lambda):
+        return
+    params = _param_names(site.func)
+    offset = 1 if site.bound_self else 0
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func) or self_attr(node.func)
+        if callee != site.alias and self_attr(node.func) != site.alias:
+            continue
+        for i, arg in enumerate(node.args):
+            pidx = i + offset
+            if pidx < len(params) and params[pidx] in site.statics \
+                    and _is_unhashable_expr(arg):
+                findings.append(Finding(
+                    path=sf.rel, line=arg.lineno, col=arg.col_offset,
+                    rule="static-args", scope=scope_of(sf, node),
+                    message=(
+                        f"unhashable/array-valued expression passed for "
+                        f"static argument '{params[pidx]}' of "
+                        f"'{site.alias}' — TypeError or a cache entry per "
+                        "object"
+                    ),
+                ))
+        for kw in node.keywords:
+            if kw.arg in site.statics and _is_unhashable_expr(kw.value):
+                findings.append(Finding(
+                    path=sf.rel, line=kw.value.lineno,
+                    col=kw.value.col_offset, rule="static-args",
+                    scope=scope_of(sf, node),
+                    message=(
+                        f"unhashable/array-valued expression passed for "
+                        f"static argument '{kw.arg}' of '{site.alias}' — "
+                        "TypeError or a cache entry per object"
+                    ),
+                ))
+
+
+def run(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    for site in _collect_sites(sf, findings):
+        _check_body(sf, site, findings)
+        _check_call_sites(sf, site, findings)
+    return findings

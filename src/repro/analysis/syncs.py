@@ -1,0 +1,84 @@
+"""Pass 3 — device work under a coordinator lock (``sync-under-lock``).
+
+The serving tier's locks guard *metadata*: epoch counters, binding
+pointers, health tables.  Every request thread and every per-host
+subscriber loop takes them.  A jax dispatch — let alone a blocking
+`.block_until_ready()` or a `np.asarray(device_array)` copy — executed
+while one is held turns that lock into a device-latency convoy: one slow
+kernel stalls every request on the host.  The discipline (see
+serve/cluster.py: staging happens *off* the lock, the barrier-side flip is
+pointer swaps only) is lexical and therefore machine-checkable:
+
+Flag any call lexically inside a ``with self.<lock>:`` block whose callee
+is `jnp.*` / `jax.*` (minus host-side helpers like `jax.tree_util`),
+`np.asarray` / `np.array` (the host-transfer idiom in this repo),
+`.block_until_ready()`, `.scoring_matrices()` (the repo's ensemble →
+device-tables build, the single heaviest serving-path operation), or
+`jax.device_put` / `jax.device_get`.
+
+Intentional stop-the-world sections (the coordinated `_reshard`) carry a
+per-line ``# repro-lint: disable=sync-under-lock`` with justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import (
+    Finding,
+    SourceFile,
+    call_name,
+    collect_classes,
+    iter_with_held,
+    scope_of,
+)
+
+RULES = ("sync-under-lock",)
+
+# dotted-prefix triggers
+_PREFIXES = ("jnp.", "jax.numpy.")
+_JAX_PREFIX = "jax."
+_JAX_ALLOW = ("jax.tree_util.", "jax.tree.", "jax.typing.")
+# exact dotted names
+_EXACT = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+# method names that imply device sync wherever the receiver lives
+_METHODS = {"block_until_ready", "scoring_matrices"}
+
+
+def _is_sync_call(name: str | None, node: ast.Call) -> str | None:
+    """A short reason when the call is a device dispatch/sync, else None."""
+    if name is not None:
+        if name in _EXACT:
+            return f"'{name}' copies device data to host"
+        if name.startswith(_PREFIXES):
+            return f"'{name}' dispatches device work"
+        if name.startswith(_JAX_PREFIX) and not name.startswith(_JAX_ALLOW):
+            return f"'{name}' dispatches device work"
+    if isinstance(node.func, ast.Attribute) and node.func.attr in _METHODS:
+        return f"'.{node.func.attr}()' blocks on / builds device buffers"
+    return None
+
+
+def run(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    for info in collect_classes(sf):
+        if not info.lock_attrs and not info.cond_aliases:
+            continue
+        for name, meth in info.methods.items():
+            scope = f"{info.name}.{name}"
+            for node, held in iter_with_held(meth, info):
+                if not held or not isinstance(node, ast.Call):
+                    continue
+                reason = _is_sync_call(call_name(node), node)
+                if reason is None:
+                    continue
+                locks = ", ".join(f"self.{lk}" for lk in sorted(held))
+                findings.append(Finding(
+                    path=sf.rel, line=node.lineno, col=node.col_offset,
+                    rule="sync-under-lock", scope=scope,
+                    message=(
+                        f"{reason} while holding {locks} — a device sync "
+                        "under a coordinator lock stalls every thread "
+                        "waiting on it (stage off the lock, flip under it)"
+                    ),
+                ))
+    return findings

@@ -488,15 +488,15 @@ def main():
     model, prefill, decode = build_serving(cfg, args.max_new)
     params = model.init(jax.random.PRNGKey(0))
 
-    key = jax.random.PRNGKey(1)
+    key, k_tok, k_frames, k_patch = jax.random.split(jax.random.PRNGKey(1), 4)
     batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)}
+        k_tok, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)}
     if cfg.family == "audio":
         batch["frames"] = 0.1 * jax.random.normal(
-            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            k_frames, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
     if cfg.family == "vlm":
         batch["patch_embeds"] = 0.1 * jax.random.normal(
-            key, (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
+            k_patch, (args.batch, cfg.n_patches, cfg.d_model), jnp.float32)
         s_total = cfg.n_patches + args.prompt_len
         batch["positions"] = jnp.broadcast_to(
             jnp.arange(s_total, dtype=jnp.int32), (args.batch, 3, s_total))

@@ -34,6 +34,8 @@ from repro.serve.faults import (
     FaultPlan,
     HostHealth,
     StepClock,
+    assert_holds,
+    debug_locks_enabled,
 )
 from repro.serve.foldin import FoldInPlanCache, fold_in, fold_in_loop
 from repro.serve.frontend import RecommendFrontend, RecommendResult
@@ -58,4 +60,6 @@ __all__ = [
     "RecommendResult",
     "SeenIndex",
     "TopNRecommender",
+    "assert_holds",
+    "debug_locks_enabled",
 ]

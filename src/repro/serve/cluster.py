@@ -84,6 +84,7 @@ from repro.serve.faults import (
     FaultPlan,
     HostHealth,
     HostKilled,
+    assert_holds,
 )
 from repro.serve.publish import ChannelSnapshot, PublicationChannel
 
@@ -301,7 +302,8 @@ class ClusterCoordinator:
     # -- layout ---------------------------------------------------------
     @property
     def n_hosts(self) -> int:
-        return len(self.hosts)
+        with self._lock:
+            return len(self.hosts)
 
     @property
     def n_shards(self) -> int:
@@ -347,10 +349,12 @@ class ClusterCoordinator:
         Raises ValueError when the ensemble's (S, M, N, K) changed; the
         caller falls back to a full rebuild (which will retrace).
         """
-        if ensemble.shape_key() != self.ensemble.shape_key():
+        with self._lock:
+            current_key = self.ensemble.shape_key()
+        if ensemble.shape_key() != current_key:
             raise ValueError(
                 f"shape changed: {ensemble.shape_key()} vs "
-                f"{self.ensemble.shape_key()} — rebuild, don't rebind"
+                f"{current_key} — rebuild, don't rebind"
             )
         return type(self)(ensemble, **self._layout_kwargs())
 
@@ -392,6 +396,7 @@ class ClusterCoordinator:
         live binding is at the committed epoch; a SUSPECT owner (stale
         heartbeat) only as a fallback; a freshly rebuilt replica when no
         owner survives at the committed epoch. Caller holds self._lock."""
+        assert_holds(self._lock)
         fallback = None
         for h in self._owners[s]:
             if h.host_id in exclude:
@@ -417,6 +422,7 @@ class ClusterCoordinator:
         stays bit-identical and epoch monotonicity is untouched. When a
         channel is attached the replacement gets its own subscriber loop,
         so it stages future epochs like any other owner."""
+        assert_holds(self._lock)
         bounds = shard_bounds(self.ensemble.n_items, self._n_shards)
         donor = next(
             (h for h in self.hosts
@@ -465,8 +471,8 @@ class ClusterCoordinator:
                     # the host) and re-route this request
                     self.health.error(host.host_id, e)
                     tried.add(host.host_id)
-                self.gather_failovers += 1
                 with self._lock:
+                    self.gather_failovers += 1
                     host, binding = self._select_shard_locked(s, exclude=tried)
             vals.append(v)
             idx.append(i)
@@ -601,14 +607,16 @@ class ClusterCoordinator:
         if self.channel is not None:
             raise RuntimeError("already attached to a channel")
         self.channel = channel
-        self._threads = [
-            threading.Thread(
-                target=self._host_loop, args=(host,),
-                name=f"shard-host-{host.host_id}", daemon=True,
-            )
-            for host in self.hosts
-        ]
-        for t in self._threads:
+        with self._lock:
+            threads = [
+                threading.Thread(
+                    target=self._host_loop, args=(host,),
+                    name=f"shard-host-{host.host_id}", daemon=True,
+                )
+                for host in self.hosts
+            ]
+            self._threads = threads
+        for t in threads:
             t.start()
 
     def close(self) -> None:
@@ -621,10 +629,11 @@ class ClusterCoordinator:
             threads = list(self._threads)
         for t in threads:
             t.join(timeout=5.0)
-        self._threads = []
+        with self._lock:
+            self._threads = []
 
     def _host_loop(self, host: ShardHost) -> None:
-        last_staged = self._epoch
+        last_staged = self.epoch
         while not self._stop.is_set():
             self.health.beat(host.host_id)
             snap = self.channel.wait(newer_than=last_staged, timeout=0.25)
@@ -676,7 +685,11 @@ class ClusterCoordinator:
         try:
             self._fault("adopt", host.host_id)
             ensemble = self._ensemble_for(snap)
-            if ensemble.shape_key() != self.ensemble.shape_key():
+            # optimistic shape precheck — deliberately lock-free: staging
+            # revalidates (ValueError below) and _reshard re-checks epoch
+            # and shape under the lock, so a stale read here only costs one
+            # detour, never a torn commit
+            if ensemble.shape_key() != self.ensemble.shape_key():  # repro-lint: disable=guarded-field (revalidated under lock)
                 self._reshard(ensemble)
                 return
             self._fault("stage", host.host_id)
@@ -716,6 +729,7 @@ class ClusterCoordinator:
         epoch have it discarded (it was never served), hosts staged on a
         newer one keep theirs for the next barrier. Caller holds self._lock.
         """
+        assert_holds(self._lock)
         for s in range(self._n_shards):
             # a shard whose owners all died can never clear the barrier:
             # rebuild it on a surviving host now — with a channel attached
@@ -768,7 +782,11 @@ class ClusterCoordinator:
             if ensemble.epoch <= self._epoch:
                 return
             bounds = shard_bounds(ensemble.n_items, self._n_shards)
-            flats = ensemble.scoring_matrices()
+            # a reshard IS the stop-the-world path: every host must flip to
+            # the new shard bounds in one critical section or a request
+            # could gather torn cross-shard state. The device build happens
+            # under the lock by design (rare: shape changes only).
+            flats = ensemble.scoring_matrices()  # repro-lint: disable=sync-under-lock (intentional stop-the-world)
             for h in self.hosts:
                 h.live = h.build(ensemble, bounds[h.shard],
                                  bounds[h.shard + 1], flats=flats)
@@ -781,10 +799,14 @@ class ClusterCoordinator:
     # -- observability ---------------------------------------------------
     def freshness_percentiles(self) -> dict[str, float]:
         """p50/max publish -> all-shards-fresh latency (seconds)."""
-        if not self.publish_to_fresh_s:
+        # snapshot under the lock: a commit appending to the deque while
+        # np.asarray iterates it would raise "deque mutated during iteration"
+        with self._lock:
+            lat = list(self.publish_to_fresh_s)
+        if not lat:
             return {"p50": float("nan"), "max": float("nan")}
-        lat = np.asarray(self.publish_to_fresh_s)
-        return {"p50": float(np.percentile(lat, 50)), "max": float(lat.max())}
+        arr = np.asarray(lat)
+        return {"p50": float(np.percentile(arr, 50)), "max": float(arr.max())}
 
     def stats(self) -> dict:
         """One observability snapshot: committed epoch, per-host health and

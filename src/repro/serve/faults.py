@@ -42,9 +42,16 @@ Fault actions:
   drop   the operation at the seam is silently lost (the publish never
          reached the host, the candidate response never arrived); the
          host itself survives and catches up later.
+
+* **assert_holds** — the runtime half of the ``*_locked`` naming
+  convention repro-lint checks statically (docs/concurrency.md): under
+  ``REPRO_DEBUG_LOCKS=1`` (the chaos CI job) every ``*_locked`` method
+  verifies on entry that its caller actually acquired the lock; in
+  production the check compiles down to one env-var-cached boolean test.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -55,6 +62,47 @@ SEAMS = ("adopt", "stage", "commit", "gather")
 ACTIONS = ("kill", "hang", "delay", "drop")
 
 HEALTHY, SUSPECT, DEAD = "healthy", "suspect", "dead"
+
+DEBUG_LOCKS_ENV = "REPRO_DEBUG_LOCKS"
+
+
+def debug_locks_enabled() -> bool:
+    """True when ``REPRO_DEBUG_LOCKS`` is set to a non-empty, non-"0"
+    value (the chaos CI job sets it; production leaves it unset)."""
+    return os.environ.get(DEBUG_LOCKS_ENV, "") not in ("", "0")
+
+
+def assert_holds(lock) -> None:
+    """Debug-mode check that the calling thread holds `lock`.
+
+    The runtime complement of the static ``*_locked`` convention: repro-lint
+    proves call *sites* hold the lock lexically, this proves it dynamically
+    on method *entry* under ``REPRO_DEBUG_LOCKS=1``. No-op otherwise.
+
+    RLock/Condition expose ownership (``_is_owned``), so the check is
+    exact there. A plain ``threading.Lock`` has no owner concept — the
+    fallback is a non-blocking acquire probe: if it succeeds, *nobody*
+    held the lock (the convention was violated by the caller); a lock held
+    by a different thread is indistinguishable from held-by-us and passes.
+    That asymmetry is fine for the bug class this catches: a ``*_locked``
+    method reached with no lock at all.
+    """
+    if not debug_locks_enabled():
+        return
+    owned = getattr(lock, "_is_owned", None)
+    if owned is not None:
+        if not owned():
+            raise AssertionError(
+                "*_locked method entered without its lock held "
+                f"(REPRO_DEBUG_LOCKS caught a convention violation on {lock!r})"
+            )
+        return
+    if lock.acquire(blocking=False):
+        lock.release()
+        raise AssertionError(
+            "*_locked method entered while its lock was unheld "
+            f"(REPRO_DEBUG_LOCKS caught a convention violation on {lock!r})"
+        )
 
 
 class HostKilled(RuntimeError):
@@ -305,6 +353,7 @@ class HostHealth:
             return self._state_locked(int(host_id))
 
     def _state_locked(self, host_id: int) -> str:
+        assert_holds(self._lock)
         st = self._state.get(host_id, HEALTHY)
         if st == DEAD:
             return DEAD

@@ -174,30 +174,38 @@ class RecommendFrontend:
     # ------------------------------------------------------------------
     @property
     def epoch(self) -> int:
-        assert self._epoch is not None
-        return self._epoch
+        with self._lock:
+            assert self._epoch is not None
+            return self._epoch
 
     @property
     def ensemble(self) -> PosteriorEnsemble:
-        return self._recommender.ensemble
+        with self._lock:
+            rec = self._recommender
+        return rec.ensemble
 
     def refresh(self) -> bool:
         """Adopt the newest published or retained epoch; True on a swap.
 
         Checks the attached PublicationChannel first (in-memory adopt, no
         disk); falls back to polling the SampleStore directory — the only
-        path when no trainer is co-running.
+        path when no trainer is co-running. The served-epoch reads here are
+        prechecks on one locked snapshot; _swap() re-checks monotonicity
+        under its lock.
         """
+        with self._lock:
+            served = self._epoch
+            have_recommender = self._recommender is not None
         if self.channel is not None:
             snap = self.channel.snapshot()
-            if snap is not None and (self._epoch is None or snap.epoch > self._epoch):
+            if snap is not None and (served is None or snap.epoch > served):
                 return self._adopt_snapshot(snap)
         if self.store is None:
             return False
         newest = self.store.epoch()
         if newest is None:
             raise FileNotFoundError(f"no retained samples in {self.store.store.root}")
-        if self._epoch is not None and newest <= self._epoch:
+        if served is not None and newest <= served:
             return False
         try:
             ensemble = PosteriorEnsemble.load(
@@ -206,7 +214,7 @@ class RecommendFrontend:
         except (FileNotFoundError, ValueError):
             # lost the race against the trainer's prune wholesale — keep
             # serving the cached epoch and let the next poll retry
-            if self._recommender is not None:
+            if have_recommender:
                 return False
             raise
         return self._swap(ensemble, t_publish=None)
@@ -218,7 +226,9 @@ class RecommendFrontend:
         """Build an ensemble from a channel snapshot and swap it in. The
         epoch precheck is only an optimisation — _swap() re-checks under
         its lock, which is what preserves monotonicity under races."""
-        if self._epoch is not None and snap.epoch <= self._epoch:
+        with self._lock:
+            served = self._epoch
+        if served is not None and snap.epoch <= served:
             return False
         draws = snap.draws
         if self.max_samples is not None:
@@ -457,7 +467,7 @@ class RecommendFrontend:
             # The plan cache quantizes the batch's rating-count profile so
             # the fused (S*B) solve recompiles only on new shape families.
             u_draws = fold_in(None, ratings, rec.ensemble, sample=False,
-                              plan_cache=self.foldin_cache)
+                              plan_cache=self.foldin_cache)  # repro-lint: disable=guarded-field (never rebound; cache is internally locked)
             # explicit candidate-count pin (topk + batch max degree,
             # power-of-two quantized) — the same fetch the exclusion lists
             # imply, but stated independently of them, so the kernel shape

@@ -1,0 +1,164 @@
+"""Lock-discipline regressions for the serving tier, plus the
+`serve.faults.assert_holds` debug helper — the runtime half of the
+``*_locked`` convention repro-lint (`python -m repro.analysis`) checks
+statically. See docs/concurrency.md."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import as_retained_sample
+from repro.serve import ClusterCoordinator, PosteriorEnsemble
+from repro.serve.faults import HostHealth, assert_holds, debug_locks_enabled
+
+M, N, K = 16, 23, 4
+
+
+def _ensemble(steps) -> PosteriorEnsemble:
+    samples = []
+    for step in steps:
+        rng = np.random.default_rng(step)
+        samples.append(as_retained_sample(step, {
+            "u": rng.normal(size=(M, K)).astype(np.float32),
+            "v": rng.normal(size=(N, K)).astype(np.float32),
+            "hyper_u_mu": np.zeros(K, np.float32),
+            "hyper_u_lam": np.eye(K, dtype=np.float32),
+            "hyper_v_mu": np.zeros(K, np.float32),
+            "hyper_v_lam": np.eye(K, dtype=np.float32),
+            "global_mean": np.float32(0.0),
+            "alpha": np.float32(2.0),
+        }))
+    return PosteriorEnsemble(tuple(samples))
+
+
+# ---------------------------------------------------------------------------
+# assert_holds: the REPRO_DEBUG_LOCKS runtime check
+# ---------------------------------------------------------------------------
+def test_assert_holds_disabled_is_noop(monkeypatch):
+    monkeypatch.delenv("REPRO_DEBUG_LOCKS", raising=False)
+    assert not debug_locks_enabled()
+    assert_holds(threading.Lock())  # unheld, but checks are off
+
+    monkeypatch.setenv("REPRO_DEBUG_LOCKS", "0")
+    assert not debug_locks_enabled()
+    assert_holds(threading.Lock())
+
+
+def test_assert_holds_plain_lock(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_LOCKS", "1")
+    lock = threading.Lock()
+    with pytest.raises(AssertionError, match="convention violation"):
+        assert_holds(lock)
+    with lock:
+        assert_holds(lock)  # held: passes
+    # the probe must not leave the lock held behind our back
+    assert lock.acquire(blocking=False)
+    lock.release()
+
+
+def test_assert_holds_condition_ownership_is_exact(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_LOCKS", "1")
+    cond = threading.Condition()
+    with pytest.raises(AssertionError):
+        assert_holds(cond)
+    with cond:
+        assert_holds(cond)
+    # Condition tracks the owning thread: held by ANOTHER thread must
+    # still fail here (exact, unlike the plain-Lock probe)
+    entered = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with cond:
+            entered.set()
+            release.wait(5.0)
+
+    t = threading.Thread(target=holder, daemon=True)
+    t.start()
+    assert entered.wait(5.0)
+    try:
+        with pytest.raises(AssertionError):
+            assert_holds(cond)
+    finally:
+        release.set()
+        t.join(timeout=5.0)
+
+
+def test_locked_convention_enforced_on_hosthealth(monkeypatch):
+    """_state_locked is the convention's runtime canary: unlocked entry
+    raises under REPRO_DEBUG_LOCKS=1, the public locked path still works."""
+    monkeypatch.setenv("REPRO_DEBUG_LOCKS", "1")
+    health = HostHealth()
+    health.register(0)
+    assert health.state(0) == "healthy"  # acquires the lock, then delegates
+    with pytest.raises(AssertionError):
+        health._state_locked(0)
+
+
+# ---------------------------------------------------------------------------
+# fixed guarded-field findings: regressions
+# ---------------------------------------------------------------------------
+def test_freshness_percentiles_concurrent_with_commits():
+    """freshness_percentiles() used to iterate the publish_to_fresh_s deque
+    unlocked — a commit appending mid-iteration raised 'deque mutated
+    during iteration'. Hammer the read path against a writer thread doing
+    exactly what _commit_locked does."""
+    coord = ClusterCoordinator(_ensemble([1]), n_hosts=2)
+    stop = threading.Event()
+    errors: list[Exception] = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            with coord._lock:
+                coord.publish_to_fresh_s.append(float(i))
+            i += 1
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    try:
+        for _ in range(400):
+            try:
+                out = coord.freshness_percentiles()
+            except RuntimeError as e:  # pragma: no cover - the regression
+                errors.append(e)
+                break
+            assert set(out) == {"p50", "max"}
+    finally:
+        stop.set()
+        t.join(timeout=5.0)
+    assert not errors, f"deque mutated during unlocked iteration: {errors[0]}"
+
+
+def test_epoch_and_layout_reads_are_locked():
+    """The n_hosts/epoch properties and stats() must agree under the same
+    lock the commit path takes — and never deadlock against it."""
+    coord = ClusterCoordinator(_ensemble([3]), n_hosts=3)
+    assert coord.n_hosts == 3
+    assert coord.epoch == 3
+    stats = coord.stats()
+    assert stats["epoch"] == coord.epoch
+    assert stats["n_hosts"] == coord.n_hosts
+
+
+def test_rebind_shape_check_reads_committed_ensemble():
+    """rebind() now snapshots the live ensemble under the lock before the
+    shape comparison; same-shape rebinds still succeed and shape changes
+    still raise."""
+    coord = ClusterCoordinator(_ensemble([1]), n_hosts=2)
+    rebound = coord.rebind(_ensemble([2]))
+    assert rebound.epoch == 2
+    grown = PosteriorEnsemble((
+        as_retained_sample(5, {
+            "u": np.zeros((M, K), np.float32),
+            "v": np.zeros((N + 7, K), np.float32),
+            "hyper_u_mu": np.zeros(K, np.float32),
+            "hyper_u_lam": np.eye(K, dtype=np.float32),
+            "hyper_v_mu": np.zeros(K, np.float32),
+            "hyper_v_lam": np.eye(K, dtype=np.float32),
+            "global_mean": np.float32(0.0),
+            "alpha": np.float32(2.0),
+        }),
+    ))
+    with pytest.raises(ValueError, match="rebuild"):
+        coord.rebind(grown)
