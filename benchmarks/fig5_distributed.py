@@ -28,17 +28,13 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={p}'
 import sys, json, time
 sys.path.insert(0, {src!r})
 import jax
+import jax.numpy as jnp
 from repro.data import chembl_like, train_test_split
 from repro.core.distributed import DistributedBPMF
 
-ratings, _, _ = chembl_like(scale=0.002, seed=0)
-train, test = train_test_split(ratings, 0.05, seed=1)
-out = {{}}
-for mode in ("ring", "allgather", "async"):
-    s = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode, width=32)
+def timed_sweeps(s, iters):
     st = s.init(0)
     st = s.sweep(st); jax.block_until_ready(st.u)   # compile
-    iters = {iters}
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -46,20 +42,47 @@ for mode in ("ring", "allgather", "async"):
         jax.block_until_ready(st.u)
         times.append(time.perf_counter() - t0)
     times.sort()
-    dt = times[len(times) // 2]   # median: robust to scheduler hiccups
+    return st, times[len(times) // 2]   # median: robust to scheduler noise
+
+ratings, _, _ = chembl_like(scale=0.002, seed=0)
+train, test = train_test_split(ratings, 0.05, seed=1)
+out = {{}}
+for mode in ("ring", "allgather", "async"):
+    s = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode, width=32)
+    st, dt = timed_sweeps(s, {iters})
+    # per-phase split by ablation: rebuild the same program with every
+    # collective replaced by a shape-preserving local stub (ppermute ->
+    # identity, all_gather -> broadcast, psum -> x * P). The stub trace is
+    # per-instance (each sampler jits its own closure), so compute_s is
+    # the same sharded sweep minus communication; exchange_s is the rest.
+    # Numerically wrong, timing-valid — an ablation, not a chain.
+    real = (jax.lax.ppermute, jax.lax.all_gather, jax.lax.psum)
+    n_sh = s.n_shards
+    jax.lax.ppermute = lambda x, *a, **kw: x
+    jax.lax.all_gather = lambda x, *a, **kw: jnp.broadcast_to(
+        x, (n_sh,) + x.shape)
+    jax.lax.psum = lambda x, *a, **kw: x * n_sh
+    try:
+        s2 = DistributedBPMF(train, test, k=32, alpha=1.5, mode=mode,
+                             width=32)
+        _, compute = timed_sweeps(s2, {iters})
+    finally:
+        jax.lax.ppermute, jax.lax.all_gather, jax.lax.psum = real
     # run on to a common sweep count before scoring: the stale-by-one
     # async chain needs ~2x the burn-in in sweeps, so RMSE parity is a
     # plateau property, not a sweep-4 property
-    for _ in range(10 - 1 - iters):
+    for _ in range(10 - 1 - {iters}):
         st = s.sweep(st)
-    out[mode] = {{"sweep_s": dt, "rmse": s.rmse(st),
+    out[mode] = {{"sweep_s": dt, "compute_s": min(compute, dt),
+                  "exchange_s": max(dt - compute, 0.0),
+                  "rmse": s.rmse(st),
                   "items": train.shape[0] + train.shape[1]}}
 print(json.dumps(out))
 """
 
 
 def run_p(p: int, iters: int = 3) -> dict:
-    code = _WORKER.format(p=p, src=SRC, iters=iters)
+    code = _WORKER.format(p=p, src=SRC, iters=str(iters))
     res = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=900,
@@ -93,7 +116,9 @@ def main(smoke: bool = False) -> list[str]:
                 rmse_p4[mode] = d["rmse"]
             rows.append(csv_row(
                 f"fig5_{mode}_p{p}", d["sweep_s"] * 1e6,
-                f"updates_per_s={ups:.0f};efficiency={eff:.2f};rmse={d['rmse']:.3f}",
+                f"updates_per_s={ups:.0f};efficiency={eff:.2f};"
+                f"rmse={d['rmse']:.3f};compute_s={d['compute_s']:.4f};"
+                f"exchange_s={d['exchange_s']:.4f}",
             ))
     # RMSE-parity gate (paper Sec 5.2): the stale-by-one async chain must
     # land on the same plateau as the exact ring sampler at p=4

@@ -11,6 +11,9 @@ Figures:
   fig5   distributed strong scaling, ring (async) vs allgather (sync)
   fig6   comm/compute overlap structure from compiled HLO
   rmse   accuracy parity across all samplers + ALS baseline (Sec 5.2 / 6)
+  rmse_wallclock  minibatch SGLD vs fused Gibbs: RMSE-vs-wallclock curves,
+         equal-budget gate at the exact engine's floor cost, flat-iteration
+         study (per-step cost vs dataset size)
   roofline  per-(arch x shape) dry-run roofline summary
   serve  BPMF top-N serving qps + latency vs request batch size
   serve_cluster  multi-host tier: qps vs n_hosts, merge overhead, barrier
@@ -36,8 +39,8 @@ def main(argv: list[str] | None = None) -> None:
         sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
         from benchmarks import fig4_multicore, fig5_distributed, fig6_overlap
     from benchmarks import foldin_latency, lint_timing, publish_latency
-    from benchmarks import rmse_table, roofline, serve_cluster, serve_topn
-    from benchmarks import sweep_throughput
+    from benchmarks import rmse_table, rmse_wallclock, roofline
+    from benchmarks import serve_cluster, serve_topn, sweep_throughput
     from benchmarks.common import append_history_row, parse_csv_row, write_bench_json
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -61,6 +64,8 @@ def main(argv: list[str] | None = None) -> None:
          lambda: fig5_distributed.main(smoke=True)),
         ("fig6", fig6_overlap.main, False, None),
         ("rmse", rmse_table.main, False, None),
+        ("rmse_wallclock", rmse_wallclock.main, True,
+         lambda: rmse_wallclock.main(smoke=True)),
         ("sweep", sweep_throughput.main, True,
          lambda: sweep_throughput.main(smoke=True)),
         ("roofline", roofline.main, False, None),

@@ -1,7 +1,8 @@
 """The paper's primary contribution: distributed BPMF with load-balanced
 bucketed sweeps and asynchronous (ring-pipelined) communication."""
 from repro.core.buckets import BucketPlan, plan_buckets, workload_model
-from repro.core.gibbs import BPMFState, GibbsSampler
+from repro.core.gibbs import BPMFState, GibbsSampler, TRAIN_ENGINES
+from repro.core.sgld import DistributedSGLD, SGLDSampler
 from repro.core.als import ALS, ALSState
 from repro.core.hyper import NWPrior, HyperParams, default_prior, sample_normal_wishart
 
@@ -11,6 +12,9 @@ __all__ = [
     "workload_model",
     "BPMFState",
     "GibbsSampler",
+    "SGLDSampler",
+    "DistributedSGLD",
+    "TRAIN_ENGINES",
     "ALS",
     "ALSState",
     "NWPrior",

@@ -505,10 +505,24 @@ class DistributedBPMF:
         pred = np.einsum("nk,nk->n", u[self.test.rows], v[self.test.cols]) + self.global_mean
         return float(np.sqrt(np.mean((pred - self.test.vals) ** 2)))
 
+    # run() bounds the async dispatch queue: XLA's CPU collectives
+    # rendezvous per run id, and a deep enough pipeline of un-synced
+    # collective programs lets the per-device threads skew until three
+    # ranks wait on a rendezvous the fourth never joins (observed as a
+    # hard hang past ~300 queued SGLD steps on forced host devices).
+    # Draining every sync_every dispatches keeps the threads aligned at
+    # negligible cost (a Gibbs sweep dwarfs the round trip; SGLD steps
+    # lose ~nothing at depth 16 vs unbounded).
+    sync_every = 16
+    verbose_every = 5
+
     def run(self, n_sweeps: int, seed: int = 0, verbose: bool = False) -> DistState:
         state = self.init(seed)
         for i in range(n_sweeps):
             state = self.sweep(state)
-            if verbose and (i % 5 == 0 or i == n_sweeps - 1):
+            if i % self.sync_every == self.sync_every - 1:
+                jax.block_until_ready(state.u)
+            if verbose and (i % self.verbose_every == 0 or i == n_sweeps - 1):
                 print(f"sweep {i:3d} rmse {self.rmse(state):.4f}")
+        jax.block_until_ready(state.u)
         return state

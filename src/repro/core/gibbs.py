@@ -44,11 +44,25 @@ from repro.data.sparse import SparseRatings, csr_from_coo
 #              intermediate, optional bf16 gather.
 ENGINES = ("reference", "einsum", "kernel", "fused")
 
+# The full trainer family launch/train.py exposes: the four Gibbs sweep
+# engines above plus the minibatch SGLD trainer (core.sgld.SGLDSampler /
+# DistributedSGLD), which is a different sampler, not a sweep
+# implementation — resolve_engine therefore rejects it with a pointer.
+SGLD = "sgld"
+TRAIN_ENGINES = ENGINES + (SGLD,)
+
 
 def resolve_engine(engine: str | None, use_kernel: bool = False) -> str:
     """Map the (engine, legacy use_kernel flag) pair onto an ENGINES name."""
     if engine is None:
         return "kernel" if use_kernel else "einsum"
+    if engine == SGLD:
+        raise ValueError(
+            f"engine must be one of {ENGINES}, got {engine!r}: 'sgld' is "
+            "the minibatch SG-MCMC trainer, not a Gibbs sweep engine — use "
+            "core.sgld.SGLDSampler / DistributedSGLD "
+            "(launch.train --engine sgld)"
+        )
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     return engine
@@ -391,6 +405,10 @@ class GibbsSampler:
     fp32 reduction order — every ladder draws the same per-item noise.
     """
 
+    # verbose run() progress cadence; SGLD steps are ~100x cheaper than
+    # Gibbs sweeps, so its subclass prints far less often
+    verbose_every = 5
+
     def __init__(
         self,
         ratings: SparseRatings,
@@ -576,7 +594,7 @@ class GibbsSampler:
                     publish.publish(
                         int(state.step), self.sample_dict(state, host=False)
                     )
-            if verbose and (i % 5 == 0 or i == n_sweeps - 1):
+            if verbose and (i % self.verbose_every == 0 or i == n_sweeps - 1):
                 print(f"sweep {i:3d}  sample-rmse {self.sample_rmse(state):.4f}")
         if store is not None:
             store.wait()

@@ -122,24 +122,42 @@ def bpmf_train_main(args) -> None:
           f"k={args.k}, {args.sweeps} sweeps (burn-in {args.burn_in}) -> {root}")
 
     if args.mode != "single":
-        # multi-device path: DistributedBPMF over all local devices
+        # multi-device path over all local devices; sgld rides the same
+        # grid partition and exchange modes as the Gibbs trainer
         from repro.core.distributed import DistributedBPMF
+        from repro.core.sgld import DistributedSGLD
 
         width = "auto" if args.plan == "balanced" else 32
-        d = DistributedBPMF(train, test, k=args.k, alpha=4.0,
-                            mode=args.mode, width=width,
-                            engine="fused" if args.engine == "fused" else "einsum")
+        if args.engine == "sgld":
+            d = DistributedSGLD(train, test, k=args.k, alpha=4.0,
+                                mode=args.mode, width=width,
+                                minibatch=args.minibatch,
+                                step_size=args.step_size)
+        else:
+            d = DistributedBPMF(train, test, k=args.k, alpha=4.0,
+                                mode=args.mode, width=width,
+                                engine="fused" if args.engine == "fused" else "einsum")
         state = d.run(args.sweeps, seed=args.seed, verbose=True)
         print(f"test rmse {d.rmse(state):.4f} "
-              f"({d.n_shards} shards, mode={args.mode}, plan={args.plan})")
+              f"({d.n_shards} shards, engine={args.engine or 'einsum'}, "
+              f"mode={args.mode}, plan={args.plan})")
         return
 
     widths = "balanced" if args.plan == "balanced" else (8, 32, 128)
-    sampler = GibbsSampler(train, test, k=args.k, alpha=4.0,
-                           burn_in=args.burn_in, widths=widths,
-                           engine=args.engine)
+    if args.engine == "sgld":
+        from repro.core.sgld import SGLDSampler
+
+        sampler = SGLDSampler(train, test, k=args.k, alpha=4.0,
+                              burn_in=args.burn_in, widths=widths,
+                              minibatch=args.minibatch,
+                              step_size=args.step_size)
+    else:
+        sampler = GibbsSampler(train, test, k=args.k, alpha=4.0,
+                               burn_in=args.burn_in, widths=widths,
+                               engine=args.engine)
     store = SampleStore(root, keep=args.keep)
-    state = sampler.run(args.sweeps, seed=args.seed, store=store, verbose=True)
+    state = sampler.run(args.sweeps, seed=args.seed, store=store,
+                        thin=args.thin, verbose=True)
     print(f"test rmse {sampler.rmse(state):.4f}; retained "
           f"{len(store.steps())} draws; serve them with: "
           f"python -m repro.launch.serve --bpmf --samples {root}")
@@ -163,10 +181,27 @@ def main():
     ap.add_argument("--scale", type=float, default=0.01,
                     help="movielens_like dataset scale")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--engine", default=None,
-                    choices=["reference", "einsum", "kernel", "fused"],
-                    help="sweep engine (default: restructured einsum; "
-                         "'fused' = gather-syrk kernel path)")
+    from repro.core.gibbs import TRAIN_ENGINES
+
+    ap.add_argument("--engine", default=None, choices=list(TRAIN_ENGINES),
+                    help="trainer engine, one of: "
+                         "'reference' (seed Gibbs data flow, equivalence "
+                         "oracle), 'einsum' (restructured Gibbs, the "
+                         "default), 'kernel' (two-step Pallas Gibbs), "
+                         "'fused' (gather-syrk kernel Gibbs), 'sgld' "
+                         "(minibatch SG-MCMC: per-step cost set by "
+                         "--minibatch, not dataset size; --sweeps then "
+                         "counts SGLD steps)")
+    ap.add_argument("--minibatch", type=int, default=4096,
+                    help="sgld engine: padded-lane budget per half-step "
+                         "(per shard when --mode is distributed)")
+    ap.add_argument("--step-size", type=float, default=0.3,
+                    help="sgld engine: peak Langevin step size (decays "
+                         "polynomially; see optim.schedule.sgld_step_schedule)")
+    ap.add_argument("--thin", type=int, default=1,
+                    help="retain every thin-th post-burn-in draw (sgld "
+                         "publishes far more often than Gibbs — thin keeps "
+                         "store/channel traffic bounded)")
     ap.add_argument("--plan", default="balanced",
                     choices=["balanced", "pow2"],
                     help="bucket planner: 'balanced' fits variable widths to "

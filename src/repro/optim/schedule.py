@@ -1,7 +1,25 @@
-"""Learning-rate schedules."""
+"""Learning-rate / step-size schedules."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def sgld_step_schedule(
+    step, *, peak: float, decay: float = 0.33, t0: float = 200.0,
+    floor: float = 0.0,
+):
+    """Polynomial SGLD step-size decay: eps_t = peak * (t0 / (t0 + t))^decay.
+
+    The Welling & Teh (2011) a(b+t)^-gamma family, reparameterized so
+    `peak` IS eps_0 (no coupled a/b algebra when tuning). `decay` < 1
+    keeps the step sum divergent (the chain keeps exploring) while the
+    discretization bias shrinks; `floor` optionally pins a terminal step
+    size for infinite-horizon serving runs where a fully decayed chain
+    would stop mixing.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    eps = peak * (t0 / (t0 + step)) ** decay
+    return jnp.maximum(eps, floor)
 
 
 def cosine_schedule(

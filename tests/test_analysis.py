@@ -478,6 +478,36 @@ def test_prng_fold_in_and_validators_do_not_consume():
     assert analyze_source(code, rules=["prng-reuse"]) == []
 
 
+def test_prng_randint_selection_counts_as_consumption():
+    # the SGLD minibatch pattern: row selection via jax.random.randint is
+    # a draw like any other — reusing its key for the noise must flag
+    code = src("""
+        import jax
+
+        def step(key, factors):
+            rows = jax.random.randint(key, (4,), 0, 10)
+            return rows, jax.random.normal(key, factors.shape)
+    """)
+    (f,) = analyze_source(code, rules=["prng-reuse"])
+    assert "'key'" in f.message and f.line == 5
+
+
+def test_prng_per_bucket_fold_in_chain_is_clean():
+    # core/sgld.py's bucket loop: fold_in derives an independent stream
+    # per bucket without consuming the parent key
+    code = src("""
+        import jax
+
+        def minibatch(key, buckets):
+            out = []
+            for b in range(len(buckets)):
+                kb = jax.random.fold_in(key, b)
+                out.append(jax.random.randint(kb, (4,), 0, 10))
+            return out
+    """)
+    assert analyze_source(code, rules=["prng-reuse"]) == []
+
+
 def test_prng_stateful_numpy_generator_not_tracked():
     code = src("""
         import numpy as np

@@ -130,6 +130,68 @@ def test_gibbs_run_publishes_alongside_store(tmp_path):
     assert published.alpha == pytest.approx(durable.alpha)
 
 
+def test_sgld_run_publishes_alongside_store(tmp_path):
+    """SGLD parity with the Gibbs publish test: the minibatch trainer emits
+    draws through the identical store/channel hand-off, at its much higher
+    step rate (thin keeps the traffic bounded), and the channel's epoch
+    tracks the store's."""
+    from repro.core import SGLDSampler
+
+    ratings, _, _ = synthetic_lowrank(40, 24, k_true=3, nnz=600, noise=0.3, seed=0)
+    train, test = train_test_split(ratings, 0.1, seed=1)
+    store = SampleStore(tmp_path / "samples", keep=8)
+    ch = PublicationChannel(window=8)
+    sampler = SGLDSampler(train, test, k=4, alpha=2.0, burn_in=20,
+                          minibatch=256, step_size=0.3, widths=(8, 32))
+    sampler.run(60, seed=0, store=store, publish=ch, thin=10)
+
+    assert ch.epoch == store.epoch()
+    snap = ch.snapshot()
+    assert [d.step for d in snap.draws] == store.steps()
+    durable = store.load(store.epoch())
+    published = snap.draws[-1]
+    np.testing.assert_array_equal(np.asarray(published.u), durable.u)
+    np.testing.assert_array_equal(np.asarray(published.v), durable.v)
+
+
+def test_store_retention_under_high_rate_publishes(tmp_path):
+    """SGLD-rate retention: hundreds of retains against a small keep window
+    must leave exactly the last `keep` epochs on disk, in order, with the
+    newest loadable — the async writer can't tear or leak under burst."""
+    store = SampleStore(tmp_path / "samples", keep=4)
+    for step in range(1, 201):
+        store.retain(step, epoch_coded_sample(step))
+    store.wait()
+    assert store.epoch() == 200
+    assert store.steps() == list(range(197, 201))
+    got = store.load(200)
+    assert float(got.v[200 % N].max()) == pytest.approx(200.0)
+
+
+def test_frontend_stays_consistent_under_publish_burst():
+    """A tight synchronous burst of publishes (the SGLD cadence, no sleeps)
+    with refresh interleaved: served epochs stay monotone and every result
+    is internally consistent (no torn u/v mix), even though most publishes
+    are superseded before the frontend ever sees them."""
+    ch = PublicationChannel(window=1)  # S pinned at 1: exact-score checks
+    ch.publish(1, epoch_coded_sample(1))
+    fe = RecommendFrontend(channel=ch, subscribe=False, max_batch=4)
+    served = []
+    step = 2
+    for burst in range(30):
+        for _ in range(7):  # frontend refreshes once per 7 publishes
+            ch.publish(step, epoch_coded_sample(step))
+            step += 1
+        fe.refresh()
+        fe.submit(0, topk=1)
+        (res,) = fe.flush()
+        served.append(res.epoch)
+        assert res.items[0] == res.epoch % N, res
+        assert res.scores[0] == pytest.approx(float(res.epoch)), res
+    assert served == sorted(served)
+    assert served[-1] == ch.epoch == step - 1  # every refresh caught up
+
+
 # ---------------------------------------------------------------------------
 # frontend adoption: epochs, monotonicity, no disk required
 # ---------------------------------------------------------------------------

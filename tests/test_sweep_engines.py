@@ -39,6 +39,10 @@ def test_resolve_engine():
     assert resolve_engine("fused") == "fused"
     with pytest.raises(ValueError):
         resolve_engine("warp")
+    # 'sgld' is a valid --engine choice but not a sweep implementation:
+    # the error must list the sweep engines AND point at the SGLD samplers
+    with pytest.raises(ValueError, match="SGLDSampler"):
+        resolve_engine("sgld")
 
 
 # ---------------------------------------------------------------------------
