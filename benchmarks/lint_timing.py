@@ -3,12 +3,18 @@
 The lint job is blocking in CI, so its cost is part of every push's
 latency budget — this suite tracks it the same way the kernel suites
 track theirs. One full `analyze_paths` pass over ``src`` and ``tests``
-(all four rule passes), timed end to end including parsing:
+(all rule passes), timed end to end including parsing:
 
     repro_lint,<us per file>,files=<n>;findings=<m>;total_ms=<t>
 
-Smoke mode runs one pass (it is already ~1 s); the full mode runs three
-and reports the best, so the row is stable against filesystem-cache noise.
+plus one row per pass module (its rule subset run in isolation — parsing
+is repeated per row, so the per-pass total_ms columns sum to more than
+the combined row; the point is catching a single pass going quadratic):
+
+    repro_lint_<pass>,<us per file>,files=<n>;findings=<m>;total_ms=<t>
+
+Smoke mode runs one rep per row (already ~1 s each); the full mode runs
+three and reports the best, so rows are stable against cache noise.
 """
 from __future__ import annotations
 
@@ -18,25 +24,36 @@ from pathlib import Path
 from benchmarks.common import REPO_ROOT
 
 
-def main(smoke: bool = False):
+def _timed_row(name: str, paths, rules, reps: int) -> str:
     from repro.analysis import analyze_paths
     from repro.analysis.cli import discover
 
-    paths = [REPO_ROOT / "src", REPO_ROOT / "tests"]
     n_files = len(discover(paths))
-    reps = 1 if smoke else 3
     best_s = float("inf")
     findings: list = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        findings, errors = analyze_paths(paths, REPO_ROOT)
+        findings, errors = analyze_paths(paths, REPO_ROOT, rules=rules)
         best_s = min(best_s, time.perf_counter() - t0)
         if errors:
             raise RuntimeError(f"repro-lint parse errors: {errors}")
     us_per_file = best_s * 1e6 / max(n_files, 1)
     derived = (f"files={n_files};findings={len(findings)};"
                f"total_ms={best_s * 1e3:.1f}")
-    yield f"repro_lint,{us_per_file:.1f},{derived}"
+    return f"{name},{us_per_file:.1f},{derived}"
+
+
+def main(smoke: bool = False):
+    from repro.analysis import ALL_RULES
+    from repro.analysis.cli import PASSES
+
+    paths = [REPO_ROOT / "src", REPO_ROOT / "tests"]
+    reps = 1 if smoke else 3
+    yield _timed_row("repro_lint", paths, frozenset(ALL_RULES), reps)
+    for pass_mod in PASSES:
+        name = pass_mod.__name__.rsplit(".", 1)[-1]
+        yield _timed_row(f"repro_lint_{name}", paths,
+                         frozenset(pass_mod.RULES), reps)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,27 @@
 """repro-lint: repo-custom static analysis for the concurrency and
 retrace invariants the async serving/training stack depends on.
 
-Four stdlib-`ast` passes (no runtime deps — the analyzer never imports the
-code it checks):
+Seven stdlib-`ast` passes (no runtime deps — the analyzer never imports
+the code it checks):
 
-* ``locks``   — lock discipline: inferred guarded-field sets, the
+* ``locks``       — lock discipline: inferred guarded-field sets, the
   ``*_locked`` calling convention, re-acquisition deadlocks.
-* ``retrace`` — jit retrace hazards: Python branches on traced args,
+* ``retrace``     — jit retrace hazards: Python branches on traced args,
   malformed/unhashable statics, concretizing shape leaks.
-* ``syncs``   — device dispatch/sync under a coordinator lock.
-* ``prng``    — PRNG key reuse without an intervening split.
+* ``syncs``       — device dispatch/sync under a coordinator lock.
+* ``prng``        — PRNG key reuse without an intervening split.
+* ``collectives`` — SPMD discipline: ppermute bijectivity, collectives
+  unbalanced across cond/switch arms (deadlock), axis_name validity.
+* ``sharding``    — init-vs-step layout drift (the silent-recompile bug
+  class) and donated-buffer reuse-after-donation.
+* ``pallas``      — Mosaic lowerability pre-checks for pallas_call
+  kernels: interpret-only ops, BlockSpec/grid arithmetic, ANY-space ref
+  access, output-ref read-before-initialize.
 
 CLI: ``python -m repro.analysis [paths...]`` (see `repro.analysis.cli`).
-Docs: ``docs/concurrency.md`` — rule catalogue, suppression & baseline
-workflow, and the runtime cross-check (`serve.faults.assert_holds`).
+Docs: ``docs/static-analysis.md`` — rule catalogue, Mosaic allowlist
+rationale, suppression & baseline workflow; ``docs/concurrency.md`` keeps
+the runtime cross-check (`serve.faults.assert_holds`).
 """
 from repro.analysis.cli import ALL_RULES, RULE_DOCS, analyze_paths, main
 from repro.analysis.common import Finding, SourceFile

@@ -1,12 +1,15 @@
 """repro-lint CLI: `python -m repro.analysis [paths...]`.
 
-Runs the four AST passes (lock discipline, retrace hazards, device-sync-
-under-lock, PRNG discipline) over the given files/directories (default:
-``src tests``), applies per-line suppressions and the checked-in baseline,
-and exits non-zero on any new finding — the blocking CI gate.
+Runs the seven AST passes (lock discipline, retrace hazards, device-sync-
+under-lock, PRNG discipline, collective discipline, sharding layout, Pallas
+lowerability) over the given files/directories (default: ``src tests``),
+applies per-line suppressions and the checked-in baseline, and exits
+non-zero on any new finding — the blocking CI gate.
 
     python -m repro.analysis src tests                 # text output
     python -m repro.analysis --format json src tests   # machine-readable
+    python -m repro.analysis --changed-only src tests  # git-diff-scoped
+    python -m repro.analysis --out lint-report.json    # JSON artifact
     python -m repro.analysis --write-baseline          # grandfather current
     python -m repro.analysis --list-rules              # rule catalogue
 
@@ -16,16 +19,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 from collections import Counter
 from pathlib import Path
 
 from repro.analysis import baseline as baseline_mod
-from repro.analysis import locks, prng, retrace, syncs
+from repro.analysis import (collectives, locks, pallas, prng, retrace,
+                            sharding, syncs)
 from repro.analysis.common import Finding, SourceFile
 
-PASSES = (locks, retrace, syncs, prng)
+PASSES = (locks, retrace, syncs, prng, collectives, sharding, pallas)
 
 RULE_DOCS = {
     "guarded-field": "read/write of a lock-guarded attribute outside the lock",
@@ -36,6 +41,15 @@ RULE_DOCS = {
     "static-args": "malformed or unhashable static_argnums/static_argnames",
     "sync-under-lock": "device dispatch/sync while holding a coordinator lock",
     "prng-reuse": "PRNG key consumed twice without an intervening split",
+    "ppermute-perm": "ppermute permutation is not a bijection on the axis",
+    "collective-branch": "collective reachable from only one cond/switch arm",
+    "collective-axis": "collective axis_name not declared by any mesh/spec",
+    "state-sharding": "shard_map state assembled in init without explicit shardings",
+    "donated-reuse": "buffer read again after being donated to a jitted call",
+    "pallas-lowering": "interpret-only op (top_k/sort/gather) in a Pallas kernel",
+    "pallas-blockspec": "index_map arity/units or grid divisibility inconsistent",
+    "pallas-anyspace": "direct load/store on an ANY-memory-space ref (needs DMA)",
+    "pallas-out-init": "output ref read before initialize without aliasing",
 }
 
 ALL_RULES = tuple(RULE_DOCS)
@@ -85,6 +99,22 @@ def analyze_paths(paths: list[Path], root: Path,
     return findings, errors
 
 
+def git_changed_files(root: Path) -> set[Path] | None:
+    """Files touched vs HEAD (staged + unstaged + untracked), resolved
+    absolute; None when git is unavailable / not a repository."""
+    out: set[Path] = set()
+    for cmd in (["git", "diff", "--name-only", "HEAD"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            res = subprocess.run(cmd, cwd=root, capture_output=True,
+                                 text=True, check=True)
+        except (OSError, subprocess.CalledProcessError):
+            return None
+        out.update((root / line).resolve()
+                   for line in res.stdout.splitlines() if line.strip())
+    return out
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -101,6 +131,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="record every current finding as grandfathered and exit 0")
     ap.add_argument("--rules", default=None,
                     help="comma-separated rule subset to run")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="only analyze files changed vs git HEAD "
+                         "(staged, unstaged, untracked) — fast pre-commit runs")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the JSON report to FILE "
+                         "(independent of --format)")
     ap.add_argument("--root", default=".",
                     help="paths in output/baseline are relative to this")
     ap.add_argument("--list-rules", action="store_true")
@@ -127,6 +163,14 @@ def main(argv: list[str] | None = None) -> int:
         print(f"no such path: {', '.join(map(str, missing))}", file=sys.stderr)
         return 2
 
+    if args.changed_only:
+        changed = git_changed_files(root)
+        if changed is None:
+            print("--changed-only: git unavailable or not a repository",
+                  file=sys.stderr)
+            return 2
+        paths = [p for p in discover(paths) if p.resolve() in changed]
+
     t0 = time.perf_counter()
     findings, errors = analyze_paths(paths, root, rules)
     elapsed = time.perf_counter() - t0
@@ -148,15 +192,18 @@ def main(argv: list[str] | None = None) -> int:
             return 2
     new, suppressed, stale = baseline_mod.apply(findings, base)
 
+    payload = {
+        "findings": [vars(f) for f in new],
+        "summary": dict(Counter(f.rule for f in new)),
+        "baseline": {"suppressed": suppressed, "stale": stale},
+        "parse_errors": errors,
+        "files_analyzed": len(discover(paths)),
+        "elapsed_s": round(elapsed, 4),
+    }
+    if args.out:
+        Path(args.out).write_text(json.dumps(payload, indent=1) + "\n")
     if args.format == "json":
-        print(json.dumps({
-            "findings": [vars(f) for f in new],
-            "summary": dict(Counter(f.rule for f in new)),
-            "baseline": {"suppressed": suppressed, "stale": stale},
-            "parse_errors": errors,
-            "files_analyzed": len(discover(paths)),
-            "elapsed_s": round(elapsed, 4),
-        }, indent=1))
+        print(json.dumps(payload, indent=1))
     else:
         for f in new:
             print(f.render())

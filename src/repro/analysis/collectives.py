@@ -1,0 +1,429 @@
+"""Collective-discipline pass: SPMD hazards inside shard_map/sweep bodies.
+
+The distributed trainer's correctness rests on three properties that no
+cheap test covers (a wrong permutation or a one-armed collective only
+deadlocks/corrupts at real shard counts, and the CPU simulation happily
+computes *something*):
+
+* **ppermute-perm** — every ``lax.ppermute`` permutation must be a
+  bijection on the axis: duplicate sources or destinations drop/duplicate
+  a block, and a destination outside ``[0, n)`` (a ring shift with the
+  wraparound ``% n`` forgotten) hangs the collective.  Literal pair lists
+  are checked directly; the repo's ring idiom
+  ``[(i, (i + 1) % n) for i in range(n)]`` is probe-evaluated at several
+  concrete shard counts, so any arithmetic over the loop variable and the
+  ring size is covered without a real tracer.
+
+* **collective-branch** — a collective reachable from only one arm of
+  ``lax.cond`` / ``lax.switch`` is an SPMD deadlock: shards that take the
+  other arm never enter the rendezvous.  Arms are compared as the ordered
+  sequence of collective ops each one issues (lambdas inlined, same-file
+  function references expanded two levels deep).  Arms that cannot be
+  resolved to same-file code are skipped rather than guessed at.
+
+* **collective-axis** — ``axis_name`` arguments must name an axis the
+  file actually declares (``jax.make_mesh``/``Mesh`` axis tuples,
+  ``PartitionSpec``/``P`` entries, resolved through module-level string
+  constants like ``AXIS = "items"``).  Only literal/constant-resolvable
+  axis arguments in files that declare at least one axis are checked —
+  parameters and imported names are someone else's contract.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, SourceFile, call_name, scope_of
+
+RULES = ("ppermute-perm", "collective-branch", "collective-axis")
+
+# ops that synchronize across an axis (deadlock-relevant, axis-checked)
+COMM_OPS = frozenset({
+    "psum", "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+    "all_gather", "all_to_all", "psum_scatter",
+})
+# axis-checked but free of cross-shard synchronization
+AXIS_ONLY_OPS = frozenset({"axis_index"})
+AXIS_OPS = COMM_OPS | AXIS_ONLY_OPS
+
+# shard counts the ring arithmetic is probed at; 4 catches parity bugs,
+# 3/5 catch anything tuned to even counts
+_PROBE_COUNTS = (3, 4, 5)
+_EVAL_LIMIT = 64  # AST-size cap for the probe evaluator
+
+
+def _leaf(name: str | None) -> str | None:
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _collective_call(node: ast.Call) -> str | None:
+    """Leaf op name when `node` calls a jax.lax collective, else None."""
+    name = call_name(node)
+    leaf = _leaf(name)
+    if leaf in AXIS_OPS and name != leaf:  # require a dotted lax./jax.lax. base
+        return leaf
+    return None
+
+
+# ---------------------------------------------------------------------------
+# tiny constant/arith evaluator for permutation probing
+# ---------------------------------------------------------------------------
+def _probe_eval(node: ast.AST, env: dict[str, int]) -> int | None:
+    """Evaluate integer arithmetic over Names bound in `env`. None = give up."""
+    if sum(1 for _ in ast.walk(node)) > _EVAL_LIMIT:
+        return None
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, int) else None
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _probe_eval(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lhs = _probe_eval(node.left, env)
+        rhs = _probe_eval(node.right, env)
+        if lhs is None or rhs is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Add):
+                return lhs + rhs
+            if isinstance(node.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(node.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(node.op, ast.Mod):
+                return lhs % rhs
+            if isinstance(node.op, ast.FloorDiv):
+                return lhs // rhs
+        except (ZeroDivisionError, ValueError):
+            return None
+    return None
+
+
+def _pair_elts(node: ast.AST) -> tuple[ast.AST, ast.AST] | None:
+    if isinstance(node, (ast.Tuple, ast.List)) and len(node.elts) == 2:
+        return node.elts[0], node.elts[1]
+    return None
+
+
+def _check_pairs(pairs: list[tuple[int, int]], n: int | None) -> str | None:
+    """Human-readable defect in a concrete (src, dst) pair list, or None."""
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != len(srcs):
+        return "duplicate source shard (a block is sent twice)"
+    if len(set(dsts)) != len(dsts):
+        return "duplicate destination shard (two blocks collide)"
+    if n is not None:
+        bad = [x for x in srcs + dsts if not 0 <= x < n]
+        if bad:
+            return (f"shard id {bad[0]} outside [0, {n}) — missing '% "
+                    "n_shards' ring wraparound?")
+    elif any(x < 0 for x in srcs + dsts):
+        return "negative shard id in permutation"
+    return None
+
+
+class _Scopes:
+    """Name -> assigned value expression, innermost enclosing scope first."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+
+    def lookup(self, use_site: ast.AST, name: str) -> ast.AST | None:
+        cur = self.sf.parent(use_site)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Module)):
+                for sub in ast.walk(cur):
+                    if not isinstance(sub, ast.Assign):
+                        continue
+                    for tgt in sub.targets:
+                        if isinstance(tgt, ast.Name) and tgt.id == name:
+                            return sub.value
+            cur = self.sf.parent(cur)
+        return None
+
+
+def _check_perm(sf: SourceFile, call: ast.Call, perm: ast.AST,
+                scopes: _Scopes) -> str | None:
+    """Defect message for a ppermute perm argument, or None when it is a
+    provable bijection / not statically evaluable."""
+    if isinstance(perm, ast.Name):
+        resolved = scopes.lookup(call, perm.id)
+        if resolved is None:
+            return None
+        perm = resolved
+
+    if isinstance(perm, (ast.List, ast.Tuple)):
+        pairs: list[tuple[int, int]] = []
+        for elt in perm.elts:
+            pe = _pair_elts(elt)
+            if pe is None:
+                return "permutation entry is not a (source, dest) pair"
+            src = _probe_eval(pe[0], {})
+            dst = _probe_eval(pe[1], {})
+            if src is None or dst is None:
+                return None  # dynamic entries: out of static reach
+            pairs.append((src, dst))
+        return _check_pairs(pairs, None) if pairs else None
+
+    if isinstance(perm, ast.ListComp) and len(perm.generators) == 1:
+        gen = perm.generators[0]
+        if gen.ifs or not isinstance(gen.target, ast.Name):
+            return None
+        it = gen.iter
+        if not (isinstance(it, ast.Call) and _leaf(call_name(it)) == "range"
+                and len(it.args) == 1):
+            return None
+        pe = _pair_elts(perm.elt)
+        if pe is None:
+            return "permutation entry is not a (source, dest) pair"
+        size = it.args[0]
+        if isinstance(size, ast.Constant) and isinstance(size.value, int):
+            probe_ns, size_name = [size.value], None
+        elif isinstance(size, ast.Name):
+            probe_ns, size_name = list(_PROBE_COUNTS), size.id
+        else:
+            return None
+        loop = gen.target.id
+        for n in probe_ns:
+            env = {loop: 0}
+            if size_name is not None:
+                env[size_name] = n
+            pairs = []
+            for i in range(n):
+                env[loop] = i
+                src = _probe_eval(pe[0], env)
+                dst = _probe_eval(pe[1], env)
+                if src is None or dst is None:
+                    return None  # arithmetic beyond the evaluator: skip
+                pairs.append((src, dst))
+            defect = _check_pairs(pairs, n)
+            if defect:
+                return f"at {n} shards: {defect}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# collective-branch: arm comparison for lax.cond / lax.switch
+# ---------------------------------------------------------------------------
+def _functions_by_name(sf: SourceFile) -> dict[str, ast.FunctionDef]:
+    out: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _arm_callable(node: ast.AST) -> ast.AST | str | None:
+    """A branch argument as Lambda node, function-name string, or None."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call) and _leaf(call_name(node)) == "partial":
+        if node.args and isinstance(node.args[0], ast.Name):
+            return node.args[0].id
+    return None
+
+
+def _collective_seq(body: ast.AST, funcs: dict[str, ast.FunctionDef],
+                    depth: int) -> list[str] | None:
+    """Ordered collective leaf names issued by `body`, expanding same-file
+    callees `depth` levels; None when an arm calls an unresolvable helper
+    that might itself collect (stay silent rather than guess)."""
+    seq: list[str] = []
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        op = _collective_call(node)
+        if op is not None and op in COMM_OPS:
+            seq.append(op)
+            continue
+        name = call_name(node)
+        leaf = _leaf(name)
+        if leaf and name == leaf and leaf in funcs and depth > 0:
+            sub = _collective_seq(funcs[leaf], funcs, depth - 1)
+            if sub is None:
+                return None
+            seq.extend(sub)
+    return seq
+
+
+def _branch_arms(node: ast.Call) -> list[ast.AST] | None:
+    leaf = _leaf(call_name(node))
+    if leaf == "cond" and len(node.args) >= 3:
+        return [node.args[1], node.args[2]]
+    if leaf == "switch" and len(node.args) >= 2:
+        branches = node.args[1]
+        if isinstance(branches, (ast.List, ast.Tuple)) and branches.elts:
+            return list(branches.elts)
+    return None
+
+
+def _is_lax_branch(node: ast.Call) -> bool:
+    name = call_name(node)
+    return bool(name and "lax" in name.split(".")[:-1]
+                and _leaf(name) in ("cond", "switch"))
+
+
+# ---------------------------------------------------------------------------
+# collective-axis: declared-axes table
+# ---------------------------------------------------------------------------
+def _module_str_consts(sf: SourceFile) -> dict[str, tuple[str, ...]]:
+    """Module-level NAME = "axis" / ("a", "b") constants."""
+    out: dict[str, tuple[str, ...]] = {}
+    for node in sf.tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        val = node.value
+        if isinstance(val, ast.Constant) and isinstance(val.value, str):
+            out[node.targets[0].id] = (val.value,)
+        elif (isinstance(val, (ast.Tuple, ast.List)) and val.elts
+              and all(isinstance(e, ast.Constant) and isinstance(e.value, str)
+                      for e in val.elts)):
+            out[node.targets[0].id] = tuple(e.value for e in val.elts)
+    return out
+
+
+def _resolve_axes(node: ast.AST, consts: dict[str, tuple[str, ...]]
+                  ) -> tuple[str, ...] | None:
+    """Axis-name strings an expression denotes; None = unresolvable."""
+    if isinstance(node, ast.Constant):
+        return (node.value,) if isinstance(node.value, str) else None
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for e in node.elts:
+            sub = _resolve_axes(e, consts)
+            if sub is None:
+                return None
+            out.extend(sub)
+        return tuple(out)
+    return None
+
+
+def _declared_axes(sf: SourceFile, consts: dict[str, tuple[str, ...]]
+                   ) -> set[str]:
+    declared: set[str] = set()
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        leaf = _leaf(call_name(node))
+        if leaf in ("make_mesh", "Mesh", "AbstractMesh"):
+            cands = list(node.args[1:2])
+            cands += [kw.value for kw in node.keywords
+                      if kw.arg == "axis_names"]
+            for cand in cands:
+                axes = _resolve_axes(cand, consts)
+                if axes:
+                    declared.update(axes)
+        elif leaf in ("P", "PartitionSpec"):
+            for arg in node.args:
+                axes = _resolve_axes(arg, consts)
+                if axes:
+                    declared.update(axes)
+    return declared
+
+
+def _axis_arg(node: ast.Call, op: str) -> ast.AST | None:
+    for kw in node.keywords:
+        if kw.arg == "axis_name":
+            return kw.value
+    pos = 0 if op in AXIS_ONLY_OPS else 1
+    if len(node.args) > pos:
+        return node.args[pos]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+def run(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    scopes = _Scopes(sf)
+    funcs = _functions_by_name(sf)
+    consts = _module_str_consts(sf)
+    declared = _declared_axes(sf, consts)
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+
+        op = _collective_call(node)
+        if op is not None:
+            # -------- ppermute-perm
+            if op == "ppermute":
+                perm = None
+                if len(node.args) >= 3:
+                    perm = node.args[2]
+                else:
+                    for kw in node.keywords:
+                        if kw.arg == "perm":
+                            perm = kw.value
+                if perm is not None:
+                    defect = _check_perm(sf, node, perm, scopes)
+                    if defect:
+                        findings.append(Finding(
+                            sf.rel, node.lineno, node.col_offset,
+                            "ppermute-perm",
+                            f"ppermute permutation is not a bijection: "
+                            f"{defect}",
+                            scope_of(sf, node)))
+
+            # -------- collective-axis
+            if declared:
+                axis = _axis_arg(node, op)
+                axes = (_resolve_axes(axis, consts)
+                        if axis is not None else None)
+                if axes:
+                    unknown = [a for a in axes if a not in declared]
+                    if unknown:
+                        findings.append(Finding(
+                            sf.rel, node.lineno, node.col_offset,
+                            "collective-axis",
+                            f"{op} over axis {unknown[0]!r} but this file "
+                            f"declares axes {sorted(declared)} — collective "
+                            "will fail or silently no-op",
+                            scope_of(sf, node)))
+
+        # -------- collective-branch
+        if _is_lax_branch(node):
+            arms = _branch_arms(node)
+            if not arms:
+                continue
+            seqs: list[list[str]] = []
+            resolvable = True
+            for arm in arms:
+                target = _arm_callable(arm)
+                if isinstance(target, str):
+                    fn = funcs.get(target)
+                    if fn is None:
+                        resolvable = False
+                        break
+                    seq = _collective_seq(fn, funcs, depth=2)
+                elif target is not None:
+                    seq = _collective_seq(target, funcs, depth=2)
+                else:
+                    resolvable = False
+                    break
+                if seq is None:
+                    resolvable = False
+                    break
+                seqs.append(seq)
+            if not resolvable or not seqs:
+                continue
+            if any(seq != seqs[0] for seq in seqs[1:]):
+                desc = " vs ".join(
+                    "[" + ", ".join(s) + "]" if s else "[none]" for s in seqs)
+                findings.append(Finding(
+                    sf.rel, node.lineno, node.col_offset,
+                    "collective-branch",
+                    "cond/switch arms issue different collective sequences "
+                    f"({desc}) — shards taking the quiet arm deadlock the "
+                    "rendezvous",
+                    scope_of(sf, node)))
+
+    return findings

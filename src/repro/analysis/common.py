@@ -110,6 +110,7 @@ class SourceFile:
         self.lines = text.splitlines()
         self.tree = ast.parse(text, filename=str(path))
         self.suppressions = self._collect_suppressions()
+        self.span_suppressions = self._anchor_suppressions()
         self.parents: dict[int, ast.AST] = {}
         for parent in ast.walk(self.tree):
             for child in ast.iter_child_nodes(parent):
@@ -136,9 +137,56 @@ class SourceFile:
                 out[i] = rules
         return out
 
+    def _anchor_suppressions(self) -> list[tuple[int, int, frozenset[str]]]:
+        """Extend each suppression comment to its enclosing statement span.
+
+        A ``# repro-lint: disable=<rule>`` on a decorator line or on the
+        first line of a multiline call must cover the whole statement the
+        comment sits on, not just its physical line (findings anchor to
+        whichever line the relevant AST node starts on).  Simple statements
+        are covered end to end; compound statements (def/class/if/with/...)
+        are covered over their *header* only — decorators through the line
+        before the first body statement — so a disable on a ``def`` line
+        can never silence the entire function body.
+        """
+        if not self.suppressions:
+            return []
+        spans: list[tuple[int, int]] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.stmt):
+                continue
+            start = node.lineno
+            deco = getattr(node, "decorator_list", None)
+            if deco:
+                start = min([start] + [d.lineno for d in deco])
+            body = getattr(node, "body", None)
+            if isinstance(body, list) and body and isinstance(body[0],
+                                                              ast.stmt):
+                end = body[0].lineno - 1  # header only, never the body
+            else:
+                end = node.end_lineno or node.lineno
+            spans.append((start, max(start, end)))
+        out: list[tuple[int, int, frozenset[str]]] = []
+        for line, rules in self.suppressions.items():
+            best: tuple[int, int] | None = None
+            for start, end in spans:
+                if start <= line <= end and (
+                        best is None
+                        or end - start < best[1] - best[0]):
+                    best = (start, end)
+            if best is not None:
+                out.append((best[0], best[1], rules))
+        return out
+
     def suppressed(self, line: int, rule: str) -> bool:
         rules = self.suppressions.get(line)
-        return rules is not None and (rule in rules or "all" in rules)
+        if rules is not None and (rule in rules or "all" in rules):
+            return True
+        for start, end, span_rules in self.span_suppressions:
+            if start <= line <= end and (rule in span_rules
+                                         or "all" in span_rules):
+                return True
+        return False
 
     def source_line(self, line: int) -> str:
         if 1 <= line <= len(self.lines):

@@ -1,0 +1,483 @@
+"""Pallas pass: Mosaic-lowerability and kernel-structure pre-checks.
+
+The repo's custom kernels validate in interpret mode on CPU; the ROADMAP's
+TPU-verification item is blocked on hardware.  This pass front-loads the
+hazards that are statically visible today, so "works interpreted, dies in
+Mosaic" bugs surface at lint time instead of on silicon:
+
+* **pallas-lowering** — ops inside a ``pl.pallas_call`` kernel body that
+  are interpret-only (or historically unreliable) under the Mosaic TPU
+  compiler: ``lax.top_k``, sort/argsort, ``take_along_axis`` and the
+  gather/scatter family.  The complementary *allowlist* (what the repo's
+  kernels are expected to stick to — elementwise math, ``dot_general``,
+  ``broadcasted_iota``, masking/select, ``fori_loop``, DMA builtins) is
+  documented in docs/static-analysis.md; the check itself is a denylist so
+  new jnp helpers don't all need enumeration.
+
+* **pallas-blockspec** — BlockSpec/grid arithmetic: an ``index_map``
+  lambda whose arity doesn't match the grid rank (plus scalar-prefetch
+  refs), whose returned tuple length doesn't match the block shape, or
+  that returns *element* offsets (``i * block_m``) where Pallas expects
+  *block* indices; and grid entries of the form ``a // b`` with no
+  ``a % b`` divisibility check anywhere in the wrapper (the remainder
+  rows would silently never be visited).
+
+* **pallas-anyspace** — direct subscript / ``pl.load`` / ``pl.store``
+  access to a ref whose BlockSpec pins ``memory_space=ANY``.  ANY-space
+  refs live wherever the compiler put them (usually HBM) and must be
+  moved through explicit DMA (``ref.at[...]`` + ``make_async_copy``) or
+  accepted as a known Mosaic hazard — the repo's segment-reduce output
+  accumulation is the sanctioned, documented instance.
+
+* **pallas-out-init** — reading an output ref that is neither
+  zero-initialized through ``input_output_aliases`` nor written by an
+  unconditional (or ``pl.when``-guarded first-step) store before the
+  read.  Output buffers start uninitialized; ``o_ref[...] += x`` as the
+  first access accumulates into garbage on hardware even though
+  interpret mode's zero-filled buffers hide it.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analysis.common import (Finding, SourceFile, call_name,
+                                   dotted_name, scope_of)
+
+RULES = ("pallas-lowering", "pallas-blockspec", "pallas-anyspace",
+         "pallas-out-init")
+
+# interpret-only / Mosaic-hostile ops (see docs/static-analysis.md for the
+# positive allowlist these are the complement of)
+DENY_OPS = frozenset({
+    "top_k", "approx_max_k", "approx_min_k",
+    "sort", "argsort", "sort_key_val", "searchsorted",
+    "take", "take_along_axis", "gather",
+    "scatter", "scatter_add", "scatter_max", "scatter_min", "scatter_mul",
+    "unique", "nonzero",
+})
+_OP_BASES = frozenset({"jax", "jnp", "lax", "np", "numpy"})
+
+
+def _leaf(name: str | None) -> str | None:
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+def _deny_call(node: ast.Call) -> str | None:
+    name = call_name(node)
+    if not name or "." not in name:
+        return None
+    base, leaf = name.split(".", 1)[0], name.rsplit(".", 1)[-1]
+    if base in _OP_BASES and leaf in DENY_OPS:
+        return name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# call-site model
+# ---------------------------------------------------------------------------
+@dataclass
+class _BlockSpec:
+    node: ast.Call
+    block_shape: ast.Tuple | None = None
+    index_map: ast.AST | None = None
+    any_space: bool = False
+
+
+@dataclass
+class _Site:
+    call: ast.Call
+    kernel: ast.FunctionDef
+    n_prefetch: int = 0
+    in_specs: list[_BlockSpec] = field(default_factory=list)
+    out_specs: list[_BlockSpec] = field(default_factory=list)
+    n_out: int = 0
+    n_scratch: int = 0
+    grid: ast.AST | None = None
+    aliased_outs: set[int] = field(default_factory=set)
+    specs_known: bool = False
+
+
+def _parse_blockspec(node: ast.AST) -> _BlockSpec | None:
+    if not (isinstance(node, ast.Call)
+            and _leaf(call_name(node)) == "BlockSpec"):
+        return None
+    bs = _BlockSpec(node=node)
+    if node.args and isinstance(node.args[0], ast.Tuple):
+        bs.block_shape = node.args[0]
+    if len(node.args) >= 2:
+        bs.index_map = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "block_shape" and isinstance(kw.value, ast.Tuple):
+            bs.block_shape = kw.value
+        elif kw.arg == "index_map":
+            bs.index_map = kw.value
+        elif kw.arg == "memory_space":
+            bs.any_space = (_leaf(dotted_name(kw.value)) == "ANY")
+    return bs
+
+
+def _spec_list(node: ast.AST | None) -> list[_BlockSpec] | None:
+    """A [BlockSpec, ...] literal / single BlockSpec as a list, else None."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for elt in node.elts:
+            bs = _parse_blockspec(elt)
+            if bs is None:
+                return None
+            out.append(bs)
+        return out
+    bs = _parse_blockspec(node)
+    return [bs] if bs is not None else None
+
+
+def _seq_len(node: ast.AST | None) -> int | None:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return len(node.elts)
+    if node is not None:
+        return 1
+    return None
+
+
+def _kernel_def(sf: SourceFile, call: ast.Call,
+                funcs: dict[str, ast.FunctionDef]
+                ) -> tuple[ast.FunctionDef | None, int]:
+    """(kernel FunctionDef, positionally-bound leading params) for the
+    first pallas_call argument; handles `functools.partial(kernel, ...)`
+    and local `kernel = functools.partial(...)` aliases."""
+    if not call.args:
+        return None, 0
+    expr: ast.AST = call.args[0]
+    for _ in range(3):
+        if isinstance(expr, ast.Name):
+            if expr.id in funcs:
+                return funcs[expr.id], 0
+            # local alias: kernel = functools.partial(_kernel, ...)
+            cur = sf.parent(call)
+            target = None
+            while cur is not None and target is None:
+                if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Module)):
+                    for sub in ast.walk(cur):
+                        if (isinstance(sub, ast.Assign)
+                                and any(isinstance(t, ast.Name)
+                                        and t.id == expr.id
+                                        for t in sub.targets)):
+                            target = sub.value
+                            break
+                cur = sf.parent(cur)
+            if target is None:
+                return None, 0
+            expr = target
+            continue
+        if (isinstance(expr, ast.Call)
+                and _leaf(call_name(expr)) == "partial" and expr.args):
+            bound = len(expr.args) - 1
+            inner = expr.args[0]
+            if isinstance(inner, ast.Name) and inner.id in funcs:
+                return funcs[inner.id], bound
+            return None, 0
+        return None, 0
+    return None, 0
+
+
+def _resolve_local(sf: SourceFile, use_site: ast.AST, name: str
+                   ) -> ast.AST | None:
+    cur = sf.parent(use_site)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Module)):
+            for sub in ast.walk(cur):
+                if (isinstance(sub, ast.Assign)
+                        and any(isinstance(t, ast.Name) and t.id == name
+                                for t in sub.targets)):
+                    return sub.value
+        cur = sf.parent(cur)
+    return None
+
+
+def _collect_sites(sf: SourceFile) -> list[_Site]:
+    funcs = {
+        n.name: n for n in ast.walk(sf.tree)
+        if isinstance(n, ast.FunctionDef)
+    }
+    sites: list[_Site] = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and _leaf(call_name(node)) == "pallas_call"):
+            continue
+        kernel, bound = _kernel_def(sf, node, funcs)
+        if kernel is None:
+            continue
+        site = _Site(call=node, kernel=kernel)
+        kwargs = {kw.arg: kw.value for kw in node.keywords if kw.arg}
+
+        spec_src = kwargs
+        grid_spec = kwargs.get("grid_spec")
+        if isinstance(grid_spec, ast.Name):
+            grid_spec = _resolve_local(sf, node, grid_spec.id)
+        if (isinstance(grid_spec, ast.Call)
+                and _leaf(call_name(grid_spec)) in (
+                    "PrefetchScalarGridSpec", "GridSpec")):
+            spec_src = {kw.arg: kw.value for kw in grid_spec.keywords
+                        if kw.arg}
+            npre = spec_src.get("num_scalar_prefetch")
+            if isinstance(npre, ast.Constant) and isinstance(npre.value, int):
+                site.n_prefetch = npre.value
+
+        in_specs = _spec_list(spec_src.get("in_specs"))
+        out_specs = _spec_list(spec_src.get("out_specs"))
+        site.grid = spec_src.get("grid")
+        if isinstance(site.grid, ast.Name):
+            site.grid = _resolve_local(sf, node, site.grid.id)
+        site.n_scratch = _seq_len(spec_src.get("scratch_shapes")) or 0
+        n_out = (_seq_len(spec_src.get("out_specs"))
+                 or _seq_len(kwargs.get("out_shape")))
+        if in_specs is not None and n_out is not None:
+            site.in_specs = in_specs
+            site.out_specs = out_specs or []
+            site.n_out = n_out
+            site.specs_known = True
+
+        aliases = kwargs.get("input_output_aliases")
+        if isinstance(aliases, ast.Dict):
+            for v in aliases.values:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    site.aliased_outs.add(v.value)
+
+        # account for params consumed by functools.partial positional args
+        site._bound = bound  # type: ignore[attr-defined]
+        sites.append(site)
+    return sites
+
+
+def _ref_roles(site: _Site) -> tuple[dict[str, _BlockSpec | None],
+                                     dict[str, int]]:
+    """(ref name -> BlockSpec or None, output ref name -> output index)."""
+    kernel = site.kernel
+    params = [a.arg for a in kernel.args.posonlyargs + kernel.args.args]
+    params = params[getattr(site, "_bound", 0):]
+    spec_of: dict[str, _BlockSpec | None] = {}
+    outs: dict[str, int] = {}
+    i = site.n_prefetch
+    for bs in site.in_specs:
+        if i < len(params):
+            spec_of[params[i]] = bs
+        i += 1
+    for j in range(site.n_out):
+        if i < len(params):
+            bs = site.out_specs[j] if j < len(site.out_specs) else None
+            spec_of[params[i]] = bs
+            outs[params[i]] = j
+        i += 1
+    return spec_of, outs
+
+
+# ---------------------------------------------------------------------------
+# access classification inside a kernel body
+# ---------------------------------------------------------------------------
+def _when_guarded(sf: SourceFile, node: ast.AST,
+                  kernel: ast.FunctionDef) -> bool:
+    cur = sf.parent(node)
+    while cur is not None and cur is not kernel:
+        if isinstance(cur, ast.FunctionDef):
+            for dec in cur.decorator_list:
+                d = dec.func if isinstance(dec, ast.Call) else dec
+                if _leaf(dotted_name(d)) == "when":
+                    return True
+        cur = sf.parent(cur)
+    return False
+
+
+def _accesses(sf: SourceFile, kernel: ast.FunctionDef, names: set[str]):
+    """Yield (name, line, col, kind, guarded) for every ref access;
+    kind in {'read', 'write', 'aug'} — 'write' means a pure store."""
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Subscript):
+            if not (isinstance(node.value, ast.Name)
+                    and node.value.id in names):
+                continue
+            parent = sf.parent(node)
+            guarded = _when_guarded(sf, node, kernel)
+            if isinstance(parent, ast.AugAssign) and parent.target is node:
+                kind = "aug"
+            elif isinstance(node.ctx, (ast.Store, ast.Del)):
+                kind = "write"
+            else:
+                kind = "read"
+            yield node.value.id, node.lineno, node.col_offset, kind, guarded
+        elif isinstance(node, ast.Call):
+            leaf = _leaf(call_name(node))
+            if leaf not in ("load", "store") or not node.args:
+                continue
+            ref = node.args[0]
+            if not (isinstance(ref, ast.Name) and ref.id in names):
+                continue
+            guarded = _when_guarded(sf, node, kernel)
+            kind = "read" if leaf == "load" else "write"
+            yield ref.id, node.lineno, node.col_offset, kind, guarded
+
+
+# ---------------------------------------------------------------------------
+# rule bodies
+# ---------------------------------------------------------------------------
+def _check_lowering(sf: SourceFile, site: _Site) -> list[Finding]:
+    out = []
+    for node in ast.walk(site.kernel):
+        if isinstance(node, ast.Call):
+            name = _deny_call(node)
+            if name:
+                out.append(Finding(
+                    sf.rel, node.lineno, node.col_offset, "pallas-lowering",
+                    f"{name} inside a pallas_call kernel is interpret-only "
+                    "under Mosaic TPU — restructure (iterative argmax / "
+                    "masked select) or gate on the ROADMAP TPU-verification "
+                    "item",
+                    scope_of(sf, node)))
+    return out
+
+
+def _check_anyspace(sf: SourceFile, site: _Site) -> list[Finding]:
+    spec_of, _ = _ref_roles(site)
+    any_refs = {n for n, bs in spec_of.items() if bs is not None
+                and bs.any_space}
+    if not any_refs:
+        return []
+    out, seen = [], set()
+    for name, line, col, kind, _g in _accesses(sf, site.kernel, any_refs):
+        if (line, name) in seen:
+            continue
+        seen.add((line, name))
+        out.append(Finding(
+            sf.rel, line, col, "pallas-anyspace",
+            f"direct {kind} of ANY-memory-space ref {name!r} — ANY refs "
+            "need explicit DMA (.at[...] + make_async_copy); a direct "
+            "access lowers to an unmanaged round trip (or not at all)",
+            scope_of(sf, site.kernel)))
+    return out
+
+
+def _check_out_init(sf: SourceFile, site: _Site) -> list[Finding]:
+    _, outs = _ref_roles(site)
+    targets = {n for n, j in outs.items() if j not in site.aliased_outs}
+    if not targets:
+        return []
+    findings = []
+    for name in sorted(targets):
+        acc = [a for a in _accesses(sf, site.kernel, {name})]
+        reads = [(l, c) for _n, l, c, k, _g in acc if k in ("read", "aug")]
+        if not reads:
+            continue
+        pure = [(l, g) for _n, l, _c, k, g in acc if k == "write"]
+        if any(g for _l, g in pure):
+            continue  # a pl.when-guarded first-step init exists
+        first_read = min(reads)
+        if any(l < first_read[0] for l, _g in pure):
+            continue  # unconditional store precedes every read
+        findings.append(Finding(
+            sf.rel, first_read[0], first_read[1], "pallas-out-init",
+            f"output ref {name!r} is read before any store and is not "
+            "zero-initialized via input_output_aliases — interpret mode's "
+            "zero-filled buffers hide the garbage a real TPU would read",
+            scope_of(sf, site.kernel)))
+    return findings
+
+
+def _check_blockspec(sf: SourceFile, site: _Site) -> list[Finding]:
+    findings = []
+    rank = None
+    if isinstance(site.grid, ast.Tuple):
+        rank = len(site.grid.elts)
+
+    for bs in site.in_specs + site.out_specs:
+        if bs is None or not isinstance(bs.index_map, ast.Lambda):
+            continue
+        lam = bs.index_map
+        arity = len(lam.args.posonlyargs + lam.args.args)
+        expected = None if rank is None else rank + site.n_prefetch
+        if expected is not None and arity != expected:
+            findings.append(Finding(
+                sf.rel, lam.lineno, lam.col_offset, "pallas-blockspec",
+                f"index_map takes {arity} arg(s) but the grid has rank "
+                f"{rank}" + (f" plus {site.n_prefetch} scalar-prefetch "
+                             "ref(s)" if site.n_prefetch else ""),
+                scope_of(sf, bs.node)))
+        if bs.block_shape is not None and isinstance(lam.body, ast.Tuple):
+            n_blk = len(bs.block_shape.elts)
+            n_ret = len(lam.body.elts)
+            if n_ret != n_blk:
+                findings.append(Finding(
+                    sf.rel, lam.lineno, lam.col_offset, "pallas-blockspec",
+                    f"index_map returns {n_ret} indices but block_shape "
+                    f"has {n_blk} dims",
+                    scope_of(sf, bs.node)))
+            else:
+                lam_params = {a.arg for a in lam.args.args
+                              + lam.args.posonlyargs}
+                for pos, (ret, dim) in enumerate(
+                        zip(lam.body.elts, bs.block_shape.elts)):
+                    if not (isinstance(ret, ast.BinOp)
+                            and isinstance(ret.op, ast.Mult)):
+                        continue
+                    for a, b in ((ret.left, ret.right),
+                                 (ret.right, ret.left)):
+                        if (isinstance(a, ast.Name) and a.id in lam_params
+                                and ast.dump(b) == ast.dump(dim)):
+                            findings.append(Finding(
+                                sf.rel, ret.lineno, ret.col_offset,
+                                "pallas-blockspec",
+                                f"index_map dim {pos} returns an *element* "
+                                "offset (grid index × block size) — Pallas "
+                                "index maps are in block units; the blocks "
+                                "read would be strided past the array",
+                                scope_of(sf, bs.node)))
+                            break
+
+    # grid divisibility: a // b in the grid needs an a % b check somewhere
+    if site.grid is not None:
+        enclosing = sf.parent(site.call)
+        while enclosing is not None and not isinstance(
+                enclosing, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            enclosing = sf.parent(enclosing)
+        scope_node = enclosing if enclosing is not None else sf.tree
+        mods = {
+            (ast.dump(n.left), ast.dump(n.right))
+            for n in ast.walk(scope_node)
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+        }
+        seen_divs = set()
+        for node in ast.walk(site.grid):
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.FloorDiv)):
+                continue
+            key = (ast.dump(node.left), ast.dump(node.right))
+            if key in seen_divs:
+                continue
+            seen_divs.add(key)
+            if key not in mods:
+                try:
+                    expr = ast.unparse(node)
+                except Exception:  # pragma: no cover - unparse is py3.9+
+                    expr = "a // b"
+                findings.append(Finding(
+                    sf.rel, node.lineno, node.col_offset, "pallas-blockspec",
+                    f"grid entry {expr} floor-divides with no matching "
+                    "divisibility check (assert a % b == 0) in the wrapper "
+                    "— trailing remainder rows are silently never visited",
+                    scope_of(sf, site.call)))
+    return findings
+
+
+def run(sf: SourceFile) -> list[Finding]:
+    if "pallas_call" not in sf.text:
+        return []
+    findings: list[Finding] = []
+    for site in _collect_sites(sf):
+        findings.extend(_check_lowering(sf, site))
+        if site.specs_known:
+            findings.extend(_check_anyspace(sf, site))
+            findings.extend(_check_out_init(sf, site))
+            findings.extend(_check_blockspec(sf, site))
+    return findings

@@ -134,8 +134,12 @@ def _gather_syrk_seg_kernel(
     else:
         pidx = (pl.dslice(seg0, br), slice(None), slice(None))
         ridx = (pl.dslice(seg0, br), slice(None))
-    pl.store(prec_ref, pidx, pl.load(prec_ref, pidx) + part_p)
-    pl.store(rhs_ref, ridx, pl.load(rhs_ref, ridx) + part_r)
+    # the ANY-space ranged read-modify-write is this kernel's documented
+    # Mosaic hazard (module docstring + ROADMAP "TPU hardware verification"
+    # item): correct under the sequential grid in interpret mode, pending a
+    # hardware check / alternative accumulation layout on real TPUs.
+    pl.store(prec_ref, pidx, pl.load(prec_ref, pidx) + part_p)  # repro-lint: disable=pallas-anyspace
+    pl.store(rhs_ref, ridx, pl.load(rhs_ref, ridx) + part_r)  # repro-lint: disable=pallas-anyspace
 
 
 @functools.partial(

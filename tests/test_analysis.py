@@ -611,3 +611,592 @@ def test_analyzer_clean_on_live_tree():
         "--baseline", str(ROOT / baseline_mod.DEFAULT_BASELINE),
     ])
     assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# pass 5: collective discipline (SPMD)
+# ---------------------------------------------------------------------------
+RING = src("""
+    import jax
+
+    AXIS = "items"
+
+    def exchange(blk, n_shards):
+        fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+        return jax.lax.ppermute(blk, AXIS, fwd)
+""")
+
+
+def test_ppermute_ring_comprehension_is_clean():
+    assert analyze_source(RING, rules=["ppermute-perm"]) == []
+
+
+def test_ppermute_missing_wraparound_flagged():
+    bad = RING.replace("(i + 1) % n_shards", "i + 1")
+    assert bad != RING
+    (f,) = analyze_source(bad, rules=["ppermute-perm"])
+    assert f.rule == "ppermute-perm" and "wraparound" in f.message
+
+
+def test_ppermute_wrong_ring_modulus_flagged():
+    bad = RING.replace("% n_shards", "% (n_shards - 1)")
+    assert bad != RING
+    (f,) = analyze_source(bad, rules=["ppermute-perm"])
+    assert "not a bijection" in f.message
+
+
+def test_ppermute_literal_duplicate_dest_flagged():
+    code = src("""
+        import jax
+
+        def exchange(blk):
+            return jax.lax.ppermute(blk, "x", [(0, 1), (1, 1)])
+    """)
+    (f,) = analyze_source(code, rules=["ppermute-perm"])
+    assert "destination" in f.message
+
+
+def test_ppermute_dynamic_perm_is_skipped():
+    code = src("""
+        import jax
+
+        def exchange(blk, perm):
+            return jax.lax.ppermute(blk, "x", perm)
+    """)
+    assert analyze_source(code, rules=["ppermute-perm"]) == []
+
+
+def test_collective_branch_one_armed_psum_flagged():
+    code = src("""
+        import jax
+
+        def step(pred, x):
+            return jax.lax.cond(
+                pred,
+                lambda v: jax.lax.psum(v, "items"),
+                lambda v: v,
+                x,
+            )
+    """)
+    (f,) = analyze_source(code, rules=["collective-branch"])
+    assert f.rule == "collective-branch" and "deadlock" in f.message
+
+
+def test_collective_branch_balanced_arms_clean():
+    code = src("""
+        import jax
+
+        def step(pred, x):
+            return jax.lax.cond(
+                pred,
+                lambda v: jax.lax.psum(v * 2, "items"),
+                lambda v: jax.lax.psum(v, "items"),
+                x,
+            )
+    """)
+    assert analyze_source(code, rules=["collective-branch"]) == []
+
+
+def test_collective_branch_expands_same_file_helpers():
+    # the collective hides two calls deep in a named arm: _stats -> psum
+    code = src("""
+        import jax
+
+        def _stats(v):
+            return jax.lax.psum(v, "items")
+
+        def _draw(v):
+            return _stats(v) + 1.0
+
+        def step(pred, x):
+            return jax.lax.cond(pred, _draw, lambda v: v, x)
+    """)
+    (f,) = analyze_source(code, rules=["collective-branch"])
+    assert "psum" in f.message
+
+
+def test_collective_branch_unresolvable_arm_skipped():
+    code = src("""
+        import jax
+        from elsewhere import mystery_fn
+
+        def step(pred, x):
+            return jax.lax.cond(
+                pred, mystery_fn, lambda v: jax.lax.psum(v, "i"), x)
+    """)
+    assert analyze_source(code, rules=["collective-branch"]) == []
+
+
+def test_collective_axis_undeclared_flagged():
+    code = src("""
+        import jax
+
+        AXIS = "items"
+
+        def make(n):
+            mesh = jax.make_mesh((n,), (AXIS,))
+            return mesh
+
+        def stats(x):
+            return jax.lax.psum(x, "rows")
+    """)
+    (f,) = analyze_source(code, rules=["collective-axis"])
+    assert "'rows'" in f.message and "items" in f.message
+
+
+def test_collective_axis_resolves_module_constants():
+    code = src("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        AXIS = "items"
+        SPEC = P(AXIS)
+
+        def stats(x):
+            return jax.lax.psum(x, AXIS)
+    """)
+    assert analyze_source(code, rules=["collective-axis"]) == []
+
+
+def test_collective_axis_silent_without_declarations():
+    # a helper module that takes axis_name from callers declares nothing:
+    # the contract lives at the call sites, not here
+    code = src("""
+        import jax
+
+        def compressed_psum(x, axis_name):
+            return jax.lax.psum(x, axis_name)
+
+        def hardcoded(x):
+            return jax.lax.psum(x, "pod")
+    """)
+    assert analyze_source(code, rules=["collective-axis"]) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 6: sharding layout
+# ---------------------------------------------------------------------------
+STATE_INIT = src("""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import shard_map
+
+    AXIS = "items"
+
+    class DistState(tuple):
+        pass
+
+    def make_sweep(mesh):
+        def sweep(state, plans):
+            return DistState(u=state.u, key=state.key)
+        state_spec = DistState(u=P(AXIS), key=P())
+        return shard_map(sweep, mesh=mesh, in_specs=(state_spec, P(AXIS)),
+                         out_specs=state_spec)
+
+    def init(mesh, key):
+        sh = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        u = 0.1 * jax.random.normal(key, (8, 4))
+        u_dev = jax.device_put(u, sh)
+        return DistState(u=u_dev, key=jax.device_put(key, rep))
+""")
+
+
+def test_state_sharding_pinned_init_is_clean():
+    assert analyze_source(STATE_INIT, rules=["state-sharding"]) == []
+
+
+def test_state_sharding_bare_field_flagged():
+    bad = STATE_INIT.replace("u=u_dev,", "u=u,")
+    assert bad != STATE_INIT
+    (f,) = analyze_source(bad, rules=["state-sharding"])
+    assert f.rule == "state-sharding"
+    assert "'u'" in f.message and "recompile" in f.message
+
+
+def test_state_sharding_direct_call_field_flagged():
+    bad = STATE_INIT.replace(
+        "key=jax.device_put(key, rep)", "key=jax.random.split(key)")
+    assert bad != STATE_INIT
+    (f,) = analyze_source(bad, rules=["state-sharding"])
+    assert "'key'" in f.message
+
+
+def test_state_sharding_spec_tree_outside_init_exempt():
+    # `state_spec = DistState(u=P(AXIS), ...)` in make_sweep stays silent:
+    # only init* functions assemble device state
+    found = analyze_source(STATE_INIT, rules=["state-sharding"])
+    assert found == []
+    optional = STATE_INIT.replace(
+        "key=jax.device_put(key, rep))",
+        "key=jax.device_put(key, rep) if mesh else None)")
+    assert analyze_source(optional, rules=["state-sharding"]) == []
+
+
+def test_state_sharding_catches_pr6_mutant_in_live_init():
+    """Seeded mutant: delete the explicit shardings in DistributedBPMF.init()
+    (the PR 6 silent-recompile bug) and the pass must catch it."""
+    live = (ROOT / "src" / "repro" / "core" / "distributed.py").read_text()
+    assert "u=jax.device_put(u, sh)," in live
+    assert analyze_source(live, rules=["state-sharding"]) == []
+    mutant = live.replace("u=jax.device_put(u, sh),", "u=u,")
+    found = analyze_source(mutant, rules=["state-sharding"])
+    assert [f.rule for f in found] == ["state-sharding"]
+    assert "'u'" in found[0].message
+
+
+def test_donated_reuse_flagged():
+    code = src("""
+        import jax
+        import jax.numpy as jnp
+
+        def run(f, state):
+            step = jax.jit(f, donate_argnums=(0,))
+            out = step(state)
+            return out, jnp.sum(state)
+    """)
+    (f,) = analyze_source(code, rules=["donated-reuse"])
+    assert f.rule == "donated-reuse" and "'state'" in f.message
+
+
+def test_donated_reuse_rebind_idiom_clean():
+    code = src("""
+        import jax
+
+        def run(f, state, n):
+            step = jax.jit(f, donate_argnums=(0,))
+            for _ in range(n):
+                state = step(state)
+            return state
+    """)
+    assert analyze_source(code, rules=["donated-reuse"]) == []
+
+
+def test_donated_reuse_argnames_and_undonated_clean():
+    code = src("""
+        import jax
+        import jax.numpy as jnp
+
+        def run(f, state, other):
+            step = jax.jit(f, donate_argnames=("state",))
+            out = step(state=state, other=other)
+            return out, jnp.sum(other)
+    """)
+    assert analyze_source(code, rules=["donated-reuse"]) == []
+    bad = code.replace("jnp.sum(other)", "jnp.sum(state)")
+    (f,) = analyze_source(bad, rules=["donated-reuse"])
+    assert "'state'" in f.message
+
+
+# ---------------------------------------------------------------------------
+# pass 7: Pallas lowerability / kernel structure
+# ---------------------------------------------------------------------------
+PALLAS = src("""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _kernel(x_ref, o_ref):
+        x = x_ref[...]
+        o_ref[...] = jnp.maximum(x, 0.0)
+
+    def relu(x, block):
+        n, k = x.shape
+        assert n % block == 0, (n, block)
+        grid = (n // block,)
+        return pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block, k), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block, k), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        )(x)
+""")
+
+
+def test_pallas_clean_kernel_is_clean():
+    assert analyze_source(PALLAS) == []
+
+
+def test_pallas_lowering_top_k_flagged():
+    bad = PALLAS.replace("jnp.maximum(x, 0.0)",
+                         "jax.lax.top_k(x, 4)[0]")
+    assert bad != PALLAS
+    (f,) = analyze_source(bad, rules=["pallas-lowering"])
+    assert f.rule == "pallas-lowering" and "top_k" in f.message
+
+
+def test_pallas_lowering_sort_flagged_only_inside_kernel():
+    bad = PALLAS.replace("jnp.maximum(x, 0.0)", "jnp.sort(x, axis=-1)")
+    (f,) = analyze_source(bad, rules=["pallas-lowering"])
+    assert "sort" in f.message
+    # the same op in the host-side wrapper is fine
+    host = PALLAS.replace("return pl.pallas_call(",
+                          "x = jnp.sort(x, axis=-1)\n    return pl.pallas_call(")
+    assert analyze_source(host, rules=["pallas-lowering"]) == []
+
+
+def test_pallas_lowering_catches_mutant_in_live_topn_kernel():
+    """Seeded mutant: drop the sanctioned suppressions in bpmf_topn.py and
+    the interpret-only top_k/take_along_axis sites must all surface."""
+    live = (ROOT / "src" / "repro" / "kernels" / "bpmf_topn.py").read_text()
+    assert analyze_source(live, rules=["pallas-lowering"]) == []
+    mutant = live.replace("  # repro-lint: disable=pallas-lowering", "")
+    assert mutant != live
+    found = analyze_source(mutant, rules=["pallas-lowering"])
+    assert len(found) == 4
+    assert {f.rule for f in found} == {"pallas-lowering"}
+
+
+def test_pallas_anyspace_direct_access_flagged():
+    code = src("""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def _kernel(v_ref, o_ref):
+            o_ref[...] = v_ref[0] * 2.0
+
+        def scale(v, n, k):
+            return pl.pallas_call(
+                _kernel,
+                grid=(1,),
+                in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+                out_specs=pl.BlockSpec((n, k), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((n, k), v.dtype),
+            )(v)
+    """)
+    (f,) = analyze_source(code, rules=["pallas-anyspace"])
+    assert f.rule == "pallas-anyspace" and "'v_ref'" in f.message
+    # .at[...] DMA slicing of the same ref is the sanctioned access path
+    dma = code.replace("v_ref[0] * 2.0", "v_ref.at[0].shape[0] * 2.0")
+    assert analyze_source(dma, rules=["pallas-anyspace"]) == []
+
+
+def test_pallas_anyspace_vmem_refs_untouched():
+    assert analyze_source(PALLAS, rules=["pallas-anyspace"]) == []
+
+
+def test_pallas_anyspace_catches_mutant_in_live_gather_syrk():
+    live = (ROOT / "src" / "repro" / "kernels"
+            / "bpmf_gather_syrk.py").read_text()
+    assert analyze_source(live, rules=["pallas-anyspace"]) == []
+    mutant = live.replace("  # repro-lint: disable=pallas-anyspace", "")
+    assert mutant != live
+    found = analyze_source(mutant, rules=["pallas-anyspace"])
+    assert len(found) == 2
+    assert {f.rule for f in found} == {"pallas-anyspace"}
+
+
+def test_pallas_out_init_accumulate_into_garbage_flagged():
+    bad = PALLAS.replace("o_ref[...] = jnp.maximum(x, 0.0)",
+                         "o_ref[...] += x")
+    assert bad != PALLAS
+    (f,) = analyze_source(bad, rules=["pallas-out-init"])
+    assert f.rule == "pallas-out-init" and "read before" in f.message
+
+
+def test_pallas_out_init_store_before_read_clean():
+    ok = PALLAS.replace(
+        "o_ref[...] = jnp.maximum(x, 0.0)",
+        "o_ref[...] = jnp.zeros_like(x)\n    o_ref[...] += x")
+    assert analyze_source(ok, rules=["pallas-out-init"]) == []
+
+
+def test_pallas_out_init_when_guarded_init_clean():
+    code = src("""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            j = pl.program_id(0)
+
+            @pl.when(j == 0)
+            def _first():
+                o_ref[...] = jnp.zeros_like(x_ref)
+
+            @pl.when(j > 0)
+            def _rest():
+                o_ref[...] += x_ref[...]
+
+        def accum(x, block, n, k):
+            assert n % block == 0
+            return pl.pallas_call(
+                _kernel,
+                grid=(n // block,),
+                in_specs=[pl.BlockSpec((block, k), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((block, k), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((block, k), x.dtype),
+            )(x)
+    """)
+    assert analyze_source(code, rules=["pallas-out-init"]) == []
+
+
+def test_pallas_out_init_aliased_output_clean():
+    code = src("""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, z_ref, o_ref):
+            o_ref[...] += x_ref[...]
+
+        def accum(x, z, n, k):
+            return pl.pallas_call(
+                _kernel,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((n, k), lambda i: (0, 0)),
+                          pl.BlockSpec((n, k), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((n, k), lambda i: (0, 0)),
+                out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+                input_output_aliases={1: 0},
+            )(x, z)
+    """)
+    assert analyze_source(code, rules=["pallas-out-init"]) == []
+
+
+def test_pallas_blockspec_arity_mismatch_flagged():
+    bad = PALLAS.replace("grid = (n // block,)", "grid = (n // block, 1)")
+    found = analyze_source(bad, rules=["pallas-blockspec"])
+    assert len(found) == 2  # both index_maps take 1 arg against a rank-2 grid
+    assert all("rank" in f.message for f in found)
+
+
+def test_pallas_blockspec_element_offset_flagged():
+    bad = PALLAS.replace("lambda i: (i, 0)", "lambda i: (i * block, 0)")
+    found = analyze_source(bad, rules=["pallas-blockspec"])
+    assert len(found) == 2
+    assert all("block units" in f.message for f in found)
+
+
+def test_pallas_blockspec_missing_divisibility_check_flagged():
+    bad = PALLAS.replace("assert n % block == 0, (n, block)\n    ", "")
+    assert bad != PALLAS
+    (f,) = analyze_source(bad, rules=["pallas-blockspec"])
+    assert "divisibility" in f.message and "n // block" in f.message
+
+
+# ---------------------------------------------------------------------------
+# suppression anchoring: statement spans, not physical lines
+# ---------------------------------------------------------------------------
+def test_suppression_on_first_line_of_multiline_call():
+    code = src("""
+        import jax
+
+        AXIS = "items"
+
+        def make(n):
+            return jax.make_mesh((n,), (AXIS,))
+
+        def stats(x):
+            return jax.lax.psum(  # repro-lint: disable=collective-axis (cross-mesh)
+                x,
+                "rows",
+            )
+    """)
+    assert analyze_source(code, rules=["collective-axis"]) == []
+    # the undirected comment does not leak onto the next statement
+    two = code + src("""
+        def more(x):
+            return jax.lax.psum(x, "cols")
+    """)
+    (f,) = analyze_source(two, rules=["collective-axis"])
+    assert "'cols'" in f.message
+
+
+def test_suppression_on_decorator_line_covers_header():
+    code = src("""
+        import jax
+
+        NUMS = (1,)
+
+        @jax.jit(
+            static_argnums=NUMS,
+        )
+        def f(x, n):
+            return x
+    """)
+    (f,) = analyze_source(code, rules=["static-args"])
+    assert "literal" in f.message
+    quiet = code.replace("@jax.jit(",
+                         "@jax.jit(  # repro-lint: disable=static-args")
+    assert analyze_source(quiet, rules=["static-args"]) == []
+
+
+def test_suppression_on_def_line_does_not_cover_body():
+    code = src("""
+        import jax
+
+        def draw(key):  # repro-lint: disable=prng-reuse
+            a = jax.random.normal(key)
+            b = jax.random.normal(key)
+            return a + b
+    """)
+    (f,) = analyze_source(code, rules=["prng-reuse"])
+    assert f.rule == "prng-reuse"
+
+
+# ---------------------------------------------------------------------------
+# CLI: --changed-only and --out
+# ---------------------------------------------------------------------------
+def _git(cwd, *args):
+    import subprocess
+    subprocess.run(
+        ["git", "-c", "user.email=lint@test", "-c", "user.name=lint", *args],
+        cwd=cwd, check=True, capture_output=True)
+
+
+def test_cli_changed_only_scopes_to_git_diff(tmp_path):
+    import shutil
+    if shutil.which("git") is None:
+        pytest.skip("git unavailable")
+    _git(tmp_path, "init", "-q")
+    committed = tmp_path / "committed.py"
+    committed.write_text(GUARDED)           # has a finding, but is committed
+    _git(tmp_path, "add", "committed.py")
+    _git(tmp_path, "commit", "-q", "-m", "seed")
+
+    fresh = tmp_path / "fresh.py"
+    fresh.write_text("x = 1\n")             # untracked, clean
+
+    args = [str(tmp_path), "--root", str(tmp_path)]
+    assert main(args) == 1                  # full run still sees committed.py
+    assert main([*args, "--changed-only"]) == 0   # diff scope skips it
+
+    fresh.write_text(GUARDED)               # untracked file gains a finding
+    assert main([*args, "--changed-only"]) == 1
+
+
+def test_cli_changed_only_outside_git_is_usage_error(tmp_path, monkeypatch):
+    target = tmp_path / "mod.py"
+    target.write_text("x = 1\n")
+    monkeypatch.setenv("GIT_CEILING_DIRECTORIES", str(tmp_path.parent))
+    monkeypatch.setenv("GIT_DIR", str(tmp_path / "no-such-gitdir"))
+    rc = main([str(target), "--root", str(tmp_path), "--changed-only"])
+    assert rc == 2
+
+
+def test_cli_out_writes_json_artifact(tmp_path, capsys):
+    target = tmp_path / "mod.py"
+    target.write_text(GUARDED)
+    report = tmp_path / "lint-report.json"
+    rc = main([str(target), "--root", str(tmp_path), "--out", str(report)])
+    assert rc == 1
+    payload = json.loads(report.read_text())
+    assert payload["summary"] == {"guarded-field": 1}
+    (finding,) = payload["findings"]
+    assert finding["rule"] == "guarded-field"
+
+
+def test_every_pass_rule_is_documented_and_reachable():
+    """RULE_DOCS, ALL_RULES, and the pass modules' RULES tuples must agree —
+    an undocumented rule (or a documented rule no pass implements) is a
+    registry bug."""
+    from repro.analysis.cli import PASSES
+
+    implemented = set()
+    for mod in PASSES:
+        implemented.update(mod.RULES)
+    assert implemented == set(RULE_DOCS) == set(ALL_RULES)
